@@ -1,0 +1,82 @@
+"""Shared benchmark plumbing: trained-model loading, data, PPL eval,
+result caching (every bench caches to experiments/results/<name>.json so
+the aggregate runner is resumable on this 1-core container)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import store
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
+from repro.models import transformer as T
+from repro.train import step as TS
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "experiments", "results")
+RUNS = os.path.join(ROOT, "runs")
+
+EVAL_SEED_STEP = 777_001        # disjoint from train steps and calib seed
+
+
+def result_path(name: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    return os.path.join(RESULTS, f"{name}.json")
+
+
+def cached(name: str, fn, force: bool = False):
+    path = result_path(name)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    out = fn()
+    out["_wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def data_config(cfg, seq_len: int = 128, seed: int = 0) -> DataConfig:
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      global_batch=8, seed=seed)
+
+
+def load_trained(arch: str = "llama-mini", run: str = "mini_mha",
+                 overrides: Optional[Dict] = None):
+    """Load the latest checkpoint of a background training run."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
+    ckpt_dir = os.path.join(RUNS, run)
+    step, state = store.restore(ckpt_dir, state)
+    return cfg, state.params, step
+
+
+def eval_batches(cfg, n_batches: int = 4, batch: int = 8,
+                 seq_len: int = 128, seed: int = 0) -> List[Dict]:
+    lm = SyntheticLM(data_config(cfg, seq_len, seed))
+    out = []
+    for i in range(n_batches):
+        rows = np.arange(i * batch, (i + 1) * batch)
+        out.append({"tokens": jnp.asarray(
+            lm.sample_rows(EVAL_SEED_STEP, rows))})
+    return out
+
+
+def calib_batches(cfg, n_samples: int = 16, batch: int = 8,
+                  seq_len: int = 128, seed: int = 0) -> List[Dict]:
+    dcfg = data_config(cfg, seq_len, seed)
+    return [{"tokens": jnp.asarray(b["tokens"])}
+            for b in calibration_batches(dcfg, n_samples, batch)]
+
+
+def ppl_of(params, cfg, batches) -> Dict[str, float]:
+    return TS.evaluate_ppl(params, cfg, batches)

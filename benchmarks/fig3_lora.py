@@ -1,0 +1,67 @@
+"""Paper Figure 3 analog: LoRA fine-tuning recovery of compressed models.
+
+Each compressed model gets the paper's recipe (lora_r=8, alpha=32,
+lr=1e-4) for a short budget on the training stream. Claim: D-Rank+LoRA
+stays below SVD-LLM+LoRA / Basis-Sharing+LoRA, with the gap widening at
+aggressive ratios.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (cached, calib_batches, data_config,
+                               eval_batches, load_trained, ppl_of)
+from repro.core import compress as CC
+from repro.data.synthetic import ShardedLoader
+from repro.train.lora import lora_finetune
+
+RATIOS = (0.3, 0.5)
+METHODS = ("svdllm", "basis", "drank")
+FT_STEPS = 60
+
+
+def _train_stream(cfg):
+    loader = ShardedLoader(data_config(cfg))
+    step = 500_000     # disjoint range from pre-training steps
+    while True:
+        yield {k: jnp.asarray(v) for k, v in loader.batch(step).items()}
+        step += 1
+
+
+def run(force: bool = False):
+    def compute():
+        cfg, params, _ = load_trained()
+        calib = calib_batches(cfg, n_samples=16)
+        evalb = eval_batches(cfg, n_batches=4)
+        from repro.core.capture import to_list_params
+        col = CC.calibrate(to_list_params(params, cfg), cfg, calib)
+        rows = []
+        for ratio in RATIOS:
+            for method in METHODS:
+                ccfg = CC.CompressionConfig(method=method, ratio=ratio,
+                                            group_size=2, beta=0.3)
+                lp, _ = CC.build_plan_and_params(params, cfg, ccfg, calib,
+                                                 collector=col)
+                before = ppl_of(lp, cfg, evalb)["ppl"]
+                tuned, hist = lora_finetune(lp, cfg, _train_stream(cfg),
+                                            steps=FT_STEPS)
+                after = ppl_of(tuned, cfg, evalb)["ppl"]
+                rows.append({"method": method, "ratio": ratio,
+                             "ppl_before": before, "ppl_after": after})
+                print(f"  f3 {method}@{ratio:.0%}: {before:.2f} -> "
+                      f"{after:.2f}", flush=True)
+        return {"rows": rows, "ft_steps": FT_STEPS}
+
+    return cached("fig3_lora", compute, force)
+
+
+def main(force: bool = False):
+    out = run(force)
+    for row in out["rows"]:
+        print(f"  {row['method']:8s}@{row['ratio']:.0%} "
+              f"ppl {row['ppl_before']:.2f} -> {row['ppl_after']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3] [--force]
+
+Emits a ``name,us_per_call,derived`` CSV row per benchmark (us_per_call =
+wall time of the bench; derived = its headline metric). All benches cache
+to experiments/results/*.json, so re-runs are free.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip fig3 (LoRA) and fig4 (wall-clock)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_lora, fig4_throughput, table1_effective_rank,
+                            table2_gqa, table3_ppl, table5_beta, table8_calib)
+
+    def d_table3(out):
+        rows = {(r["method"], r.get("ratio")): r["ppl"]
+                for r in out["rows"]}
+        dr = rows.get(("drank", 0.2))
+        sv = rows.get(("svdllm", 0.2))
+        return f"drank@20%={dr:.2f};svdllm@20%={sv:.2f}"
+
+    def d_table5(out):
+        best = min((r for r in out["rows"] if r["method"] == "drank"),
+                   key=lambda r: r["ppl"])
+        return f"best_beta={best['beta']};ppl={best['ppl']:.2f}"
+
+    def d_table2(out):
+        b = {r.get("group"): r["ppl"] for r in out["rows"]
+             if r["method"] == "basis"}
+        return f"basis_n1={b.get(1, 0):.2f};basis_n4={b.get(4, 0):.2f}"
+
+    def d_table8(out):
+        dr = [r for r in out["rows"] if r["method"] == "drank"]
+        return f"drank_orig_ppl={min(r['ppl_orig'] for r in dr):.2f}"
+
+    def d_table1(out):
+        import numpy as np
+        by = {}
+        for r in out["rows"]:
+            by.setdefault(r["type"], []).append(r["reff"])
+        return (f"V/Q_reff_ratio="
+                f"{np.mean(by['v']) / max(np.mean(by['q']), 1e-9):.2f}")
+
+    def d_fig4(out):
+        d = next(r for r in out["rows"] if r["model"] == "dense")
+        c = max((r for r in out["rows"] if r["model"] == "drank"),
+                key=lambda r: r["ratio"])
+        return (f"speedup@{c['ratio']:.0%}="
+                f"{c['tokens_per_s'] / d['tokens_per_s']:.2f}x")
+
+    def d_fig3(out):
+        dr = [r for r in out["rows"] if r["method"] == "drank"]
+        return f"drank_after={min(r['ppl_after'] for r in dr):.2f}"
+
+    benches = [
+        ("table1_effective_rank", table1_effective_rank.run, d_table1),
+        ("table3_ppl", table3_ppl.run, d_table3),
+        ("table5_beta", table5_beta.run, d_table5),
+        ("table2_gqa", table2_gqa.run, d_table2),
+        ("table8_calib", table8_calib.run, d_table8),
+        ("fig4_throughput", fig4_throughput.run, d_fig4),
+        ("fig3_lora", fig3_lora.run, d_fig3),
+    ]
+    if args.skip_slow:
+        benches = [b for b in benches if not b[0].startswith("fig")]
+    if args.only:
+        benches = [b for b in benches if args.only in b[0]]
+
+    print("name,us_per_call,derived")
+    rc = 0
+    for name, fn, derive in benches:
+        try:
+            out = fn(force=args.force)
+            us = out.get("_wall_s", 0.0) * 1e6
+            print(f"{name},{us:.0f},{derive(out)}", flush=True)
+        except Exception as e:
+            rc = 1
+            traceback.print_exc()
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

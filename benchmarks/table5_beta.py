@@ -1,0 +1,58 @@
+"""Paper Table 5 analog: PPL of D-Rank as a function of the attention
+rebalance ratio β and the group size n, vs the Basis Sharing baseline.
+
+Claim reproduced: a moderate β (≈0.3–0.4) beats both β=0 and the uniform
+Basis Sharing allocation.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (cached, calib_batches, eval_batches,
+                               load_trained, ppl_of)
+from repro.core import compress as CC
+
+BETAS = (0.0, 0.2, 0.3, 0.4, 0.5)
+GROUPS = (2, 4)
+RATIO = 0.3
+
+
+def run(force: bool = False):
+    def compute():
+        cfg, params, _ = load_trained()
+        calib = calib_batches(cfg, n_samples=16)
+        evalb = eval_batches(cfg, n_batches=4)
+        from repro.core.capture import to_list_params
+        col = CC.calibrate(to_list_params(params, cfg), cfg, calib)
+        rows = []
+        for n in GROUPS:
+            bb = CC.CompressionConfig(method="basis", ratio=RATIO,
+                                      group_size=n)
+            blp, _ = CC.build_plan_and_params(params, cfg, bb, calib,
+                                              collector=col)
+            rows.append({"method": "basis", "group": n, "beta": None,
+                         **ppl_of(blp, cfg, evalb)})
+            for beta in BETAS:
+                ccfg = CC.CompressionConfig(method="drank", ratio=RATIO,
+                                            group_size=n, beta=beta)
+                lp, _ = CC.build_plan_and_params(params, cfg, ccfg, calib,
+                                                 collector=col)
+                m = ppl_of(lp, cfg, evalb)
+                rows.append({"method": "drank", "group": n, "beta": beta,
+                             **m})
+                print(f"  t5 n={n} beta={beta}: ppl={m['ppl']:.2f}",
+                      flush=True)
+        return {"ratio": RATIO, "rows": rows}
+
+    return cached("table5_beta", compute, force)
+
+
+def main(force: bool = False):
+    out = run(force)
+    print(f"beta sweep @ {out['ratio']:.0%} compression")
+    for row in out["rows"]:
+        tag = f"beta={row['beta']}" if row["beta"] is not None else "basis"
+        print(f"  n={row['group']} {tag:10s} ppl={row['ppl']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

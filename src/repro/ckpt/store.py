@@ -1,0 +1,169 @@
+"""Checkpointing: atomic, async, manifest-driven, elastic-reshard-on-load.
+
+Layout:
+    <dir>/step_000042/arrays.npz       flat {escaped path -> np array}
+    <dir>/step_000042/manifest.json    step, keys, shapes, dtypes, user meta
+    <dir>/LATEST                       atomic pointer (text: "step_000042")
+
+Restore takes a *template* pytree (same structure as saved; e.g. a freshly
+initialized TrainState) plus optional per-leaf shardings for the CURRENT
+mesh — a job restarted on a different topology reshards on load (elastic).
+
+Async mode: the host copy (device_get) happens synchronously — cheap and
+consistent — and the disk write runs on a worker thread off the train loop's
+critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "␟"      # unit-separator glyph: safe path joiner for npz keys
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz can't round-trip ml_dtypes (bfloat16 etc.) — store fp32;
+            # restore casts back via the template dtype (exact for bf16)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None,
+         keep_last: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:09d}"
+    final = os.path.join(ckpt_dir, name)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_{name}_")
+    try:
+        arrays = _flatten(jax.device_get(tree))
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in arrays.items()})
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(arrays.keys()),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "meta": meta or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(name)
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _cleanup(ckpt_dir, keep_last)
+    return final
+
+
+def _cleanup(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(ckpt_dir, name)
+    if not os.path.exists(path):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings=None) -> Tuple[int, Any]:
+    """Load into the template's structure. `shardings`: optional pytree of
+    jax.sharding.Sharding matching template — arrays are device_put with
+    them (elastic reshard to the current mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat))
+    leaves = []
+    for (pth, leaf), shd in zip(flat, shard_flat):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in pth)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = arrays[key]
+        tgt = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        arr = jax.numpy.asarray(arr).astype(tgt)   # jnp casts to bf16 etc.
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(arr)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Single worker thread; the newest pending save wins (drop stale)."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, meta = item
+            try:
+                save(self.ckpt_dir, step, host_tree, meta, self.keep_last)
+            except BaseException as e:          # surfaced on next submit
+                self._err = e
+
+    def submit(self, step: int, tree, meta: Optional[Dict] = None) -> None:
+        if self._err:
+            raise self._err
+        host = jax.device_get(tree)              # sync host copy
+        try:                                     # drop an unstarted stale save
+            self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._q.put((step, host, meta))
+
+    def close(self, timeout: float = 60.0) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=timeout)
+        if self._err:
+            raise self._err

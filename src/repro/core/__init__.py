@@ -1,0 +1,8 @@
+"""D-Rank core: the paper's contribution as a composable module.
+capture (calibration Grams) -> numerics (whitened SVD, effective rank) ->
+groups (cross-layer grouping policies) -> allocate (Lagrange closed form,
+beta rebalance, integerization; beyond-paper energy water-filling) ->
+compress (driver + the five baselines)."""
+from repro.core.compress import (CompressionConfig, METHODS, Plan,  # noqa
+                                 build_plan_and_params, calibrate)
+from repro.core.numerics import effective_rank  # noqa: F401

@@ -1,0 +1,154 @@
+"""Calibration capture: per-linear input-activation statistics.
+
+The compression pipeline needs, for every compressible weight matrix
+``W (d_in, d_out)``, the Gram matrix of its calibration inputs
+``G = Σ_batches XᵀX`` (fp64, host-side — the paper keeps the whitening
+matrix S in fp64) plus the mean-|X| vector (ASVD's scaling).
+
+Mechanism: model parameters are converted to *list form* (stacked layer runs
+→ per-layer trees; see ``transformer._run_layers``), every linear's param
+dict gets a ``"_tag"`` string key, and ``apply_linear`` reports ``(tag, x)``
+to the active Collector while the calibration batches run eagerly (capture
+is a host-side side effect — never enable it under jit).
+
+MoE routed experts are captured separately: the dispatch buffers
+``(E, capacity, d)`` that feed the per-expert GEMMs are reported by
+``repro.models.mlp._moe_local`` under ``tag/expert{e}`` (padding rows are
+exact zeros and contribute nothing to the Gram).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.params import Params, set_capture
+
+
+class Collector:
+    """Accumulates XᵀX (fp64) and Σ|x| per tag."""
+
+    def __init__(self):
+        self.gram: Dict[str, np.ndarray] = {}
+        self.absmean: Dict[str, np.ndarray] = {}
+        self.count: Dict[str, int] = {}
+
+    def add(self, tag: str, x: jax.Array) -> None:
+        x2 = np.asarray(x, dtype=np.float64).reshape(-1, x.shape[-1])
+        g = x2.T @ x2
+        if tag in self.gram:
+            self.gram[tag] += g
+            self.absmean[tag] += np.abs(x2).sum(0)
+            self.count[tag] += x2.shape[0]
+        else:
+            self.gram[tag] = g
+            self.absmean[tag] = np.abs(x2).sum(0)
+            self.count[tag] = x2.shape[0]
+
+    def add_expert_batch(self, tag: str, xs: jax.Array) -> None:
+        """xs: (E, capacity, d) dispatch buffers — one Gram per expert."""
+        xs = np.asarray(xs, dtype=np.float64)
+        for e in range(xs.shape[0]):
+            self.add(f"{tag}/expert{e}", xs[e])
+
+    def mean_abs(self, tag: str) -> np.ndarray:
+        return self.absmean[tag] / max(1, self.count[tag])
+
+    def __enter__(self):
+        set_capture(self)
+        return self
+
+    def __exit__(self, *exc):
+        set_capture(None)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# List-form params + tagging
+# ---------------------------------------------------------------------------
+def _is_linear(d) -> bool:
+    return isinstance(d, dict) and ("w" in d or ("B" in d and "C" in d))
+
+
+def to_list_params(params: Params, cfg: ModelConfig) -> Params:
+    """Stacked layer runs -> lists of per-layer trees (deep copy of refs).
+    Already-list runs pass through. Non-run subtrees are kept as-is."""
+    out = dict(params)
+
+    def split_runs(stack: Dict, runs) -> Dict:
+        new = dict(stack)
+        for r, (_kind, n) in enumerate(runs):
+            rp = stack[f"run{r}"]
+            if isinstance(rp, list):
+                new[f"run{r}"] = rp
+            else:
+                new[f"run{r}"] = [
+                    jax.tree.map(lambda a: a[i], rp) for i in range(n)]
+        return new
+
+    out["decoder"] = split_runs(params["decoder"], cfg.layer_runs())
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers,
+                              sliding_window=0, local_global_pattern=(0, 0))
+        out["encoder"] = split_runs(params["encoder"], enc_cfg.layer_runs())
+    return out
+
+
+def to_stacked_params(list_params: Params, cfg: ModelConfig) -> Params:
+    """Inverse of ``to_list_params`` (only valid if per-layer trees have
+    identical leaf shapes — i.e. uncompressed or rank-padded)."""
+    out = dict(list_params)
+
+    def join_runs(stack: Dict, runs) -> Dict:
+        new = dict(stack)
+        for r, (_kind, n) in enumerate(runs):
+            rp = stack[f"run{r}"]
+            if isinstance(rp, list):
+                new[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a), *rp)
+        return new
+
+    out["decoder"] = join_runs(list_params["decoder"], cfg.layer_runs())
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers,
+                              sliding_window=0, local_global_pattern=(0, 0))
+        out["encoder"] = join_runs(list_params["encoder"],
+                                   enc_cfg.layer_runs())
+    return out
+
+
+def tag_linears(list_params: Params) -> Params:
+    """Returns a shallow-copied tree where every linear dict carries its
+    path as ``"_tag"`` (and MoE subtrees carry a dispatch tag)."""
+
+    def walk(node, path):
+        if _is_linear(node):
+            d = dict(node)
+            d["_tag"] = "/".join(map(str, path))
+            return d
+        if isinstance(node, dict):
+            d = {}
+            for k, v in node.items():
+                d[k] = walk(v, path + (k,))
+            if "w_gate" in node and "router" in node:   # routed-expert subtree
+                d["_tag"] = "/".join(map(str, path))
+            return d
+        if isinstance(node, list):
+            return [walk(v, path + (i,)) for i, v in enumerate(node)]
+        return node
+
+    return walk(list_params, ())
+
+
+def strip_tags(params: Params) -> Params:
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items() if k != "_tag"}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)

@@ -1,0 +1,343 @@
+"""D-Rank compression driver + the five baselines.
+
+Methods (all post-training, calibration-data-driven):
+  svd      plain truncated SVD             (no whitening, n=1, uniform k)
+  fwsvd    Fisher-weighted SVD             (diag row weights from E[g²])
+  asvd     activation-aware SVD            (diag scale (mean|X|)^α)
+  svdllm   whitened SVD                    (Cholesky of XᵀX, n=1, uniform)
+  basis    Basis Sharing                   (whitened, grouped n>1, uniform)
+  drank    THE PAPER: whitened, grouped (GQA→n=1), effective-rank Lagrange
+           allocation + β attention rebalance.
+
+The driver runs eagerly on host (calibration capture is a side effect); the
+deploy artifact is a list-form params tree whose linears are factorized
+{B, C} with a shared basis per group, loadable straight into the model
+(``transformer._run_layers`` executes list runs unrolled).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import allocate as alloc
+from repro.core import numerics as num
+from repro.core.capture import (Collector, strip_tags, tag_linears,
+                                to_list_params)
+from repro.core.groups import (BETA_MAP, Group, MatrixRef, build_groups,
+                               enumerate_matrices)
+from repro.models import transformer as T
+from repro.models.params import Params
+
+METHODS = ("svd", "fwsvd", "asvd", "svdllm", "basis", "drank", "dranke")
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "drank"
+    ratio: float = 0.2              # fraction of compressible params removed
+    group_size: int = 2             # cross-layer group width (n)
+    beta: float = 0.35              # Q/K -> V rank transfer (paper: 0.3-0.4)
+    rank_multiple: int = 1          # MXU alignment (128 on TPU deploys)
+    min_rank: int = 1
+    asvd_alpha: float = 0.5
+    damp: float = 1e-6
+    gqa_group_one: bool = True      # paper §3.4 GQA policy
+    include_experts: bool = True    # compress routed MoE experts too
+    refine: bool = False            # closed-form C update on compressed acts
+    type_filter: Tuple[str, ...] = ()   # restrict to these types (tests)
+
+
+# ---------------------------------------------------------------------------
+# Calibration passes
+# ---------------------------------------------------------------------------
+def calibrate(list_params: Params, cfg: ModelConfig,
+              batches: Iterable[Dict]) -> Collector:
+    """Run forward passes eagerly with capture enabled; returns Grams."""
+    tagged = tag_linears(list_params)
+    col = Collector()
+    with col:
+        for batch in batches:
+            T.forward(tagged, cfg, batch)
+    return col
+
+
+def fisher_rows(list_params: Params, cfg: ModelConfig,
+                batches: Iterable[Dict]) -> Dict[str, np.ndarray]:
+    """FWSVD row weights: w_i = sqrt(Σ_j E[g_ij²]) per weight matrix tag."""
+    clean = strip_tags(list_params)
+    grad_fn = jax.grad(lambda p, b: T.lm_loss(p, cfg, b)[0])
+    acc = None
+    nb = 0
+    for batch in batches:
+        g = grad_fn(clean, batch)
+        g2 = jax.tree.map(lambda a: np.asarray(a, dtype=np.float64) ** 2, g)
+        acc = g2 if acc is None else jax.tree.map(np.add, acc, g2)
+        nb += 1
+    fisher: Dict[str, np.ndarray] = {}
+    if acc is None:
+        return fisher
+
+    def get(tree, path):
+        node = tree
+        for k in path:
+            node = node[k]
+        return node
+
+    for ref in enumerate_matrices(list_params, cfg, include_experts=False):
+        f = get(acc, ref.path)["w"] / max(1, nb)
+        fisher[ref.tag] = np.sqrt(f.sum(axis=-1) + 1e-12)   # (d_in,)
+    return fisher
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+@dataclass
+class GroupResult:
+    gid: str
+    mtype: str
+    layers: List[int]
+    expert: Optional[int]
+    d_in: int
+    d_out: int
+    n: int
+    omega: int
+    reff: float
+    k: int
+    kmax: int
+    sigma_head: List[float] = field(default_factory=list)
+
+
+@dataclass
+class Plan:
+    config: CompressionConfig
+    groups: List[GroupResult]
+    summary: Dict[str, float]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "config": dataclasses.asdict(self.config),
+            "groups": [dataclasses.asdict(g) for g in self.groups],
+            "summary": self.summary,
+        }, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "Plan":
+        d = json.loads(s)
+        cfgd = d["config"]
+        cfgd["type_filter"] = tuple(cfgd.get("type_filter", ()))
+        return Plan(
+            config=CompressionConfig(**cfgd),
+            groups=[GroupResult(**g) for g in d["groups"]],
+            summary=d["summary"])
+
+    def rank_of(self, gid: str) -> int:
+        for g in self.groups:
+            if g.gid == gid:
+                return g.k
+        raise KeyError(gid)
+
+
+# ---------------------------------------------------------------------------
+# Weight access
+# ---------------------------------------------------------------------------
+def _get_node(tree, path):
+    node = tree
+    for k in path:
+        node = node[k]
+    return node
+
+
+def _member_weight(lp: Params, ref: MatrixRef) -> np.ndarray:
+    node = _get_node(lp, ref.path)
+    if ref.expert is not None:                   # stacked expert array
+        return np.asarray(node[ref.expert], dtype=np.float64)
+    return np.asarray(node["w"], dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+def _whitener_for(group: Group, ccfg: CompressionConfig, col: Collector,
+                  fisher: Optional[Dict[str, np.ndarray]]) -> num.Whitener:
+    if ccfg.method == "svd":
+        return num.identity_whitener()
+    if ccfg.method == "fwsvd":
+        return num.diag_whitener(fisher[group.members[0].tag])
+    if ccfg.method == "asvd":
+        s = np.mean([col.mean_abs(m.tag) for m in group.members], axis=0)
+        return num.diag_whitener(np.power(np.maximum(s, 1e-8),
+                                          ccfg.asvd_alpha))
+    # cholesky family: aggregate the group's Grams (DESIGN.md §1.2)
+    G = None
+    for m in group.members:
+        g = col.gram[m.tag]
+        G = g if G is None else G + g
+    return num.cholesky_whitener(G, ccfg.damp)
+
+
+def build_plan_and_params(
+        params: Params, cfg: ModelConfig, ccfg: CompressionConfig,
+        calib_batches: Sequence[Dict],
+        collector: Optional[Collector] = None,
+) -> Tuple[Params, Plan]:
+    """Compress. Returns (list-form compressed params, plan)."""
+    assert ccfg.method in METHODS, ccfg.method
+    lp = to_list_params(params, cfg)
+
+    needs_col = ccfg.method != "svd" or ccfg.refine
+    col = collector
+    if col is None and needs_col:
+        col = calibrate(lp, cfg, calib_batches)
+    fisher = (fisher_rows(lp, cfg, calib_batches)
+              if ccfg.method == "fwsvd" else None)
+
+    include_x = ccfg.include_experts and ccfg.method in (
+        "basis", "drank", "dranke", "svdllm")
+    refs = enumerate_matrices(lp, cfg, include_experts=include_x)
+    if ccfg.type_filter:
+        refs = [r for r in refs if r.mtype in ccfg.type_filter]
+
+    group_size = ccfg.group_size if ccfg.method in ("basis", "drank",
+                                                    "dranke") else 1
+    gqa_one = ccfg.gqa_group_one and ccfg.method in ("drank", "dranke")
+    groups = build_groups(refs, cfg, group_size, gqa_group_one=gqa_one)
+
+    # ---- SVD every group, collect spectra --------------------------------
+    svds: Dict[str, Tuple] = {}
+    gspecs: List[alloc.GroupSpec] = []
+    for g in groups:
+        W_cat = np.concatenate([_member_weight(lp, m) for m in g.members],
+                               axis=1)
+        wh = _whitener_for(g, ccfg, col, fisher) if col or fisher \
+            else num.identity_whitener()
+        U, sig, Vt = num.whitened_svd(W_cat, wh)
+        reff = num.effective_rank(sig)
+        svds[g.gid] = (U, sig, Vt, wh)
+        gspecs.append(alloc.GroupSpec(
+            gid=g.gid, mtype=g.mtype, reff=reff, omega=g.omega,
+            kmax=g.cost_cap, kmin=ccfg.min_rank,
+            dense_params=g.dense_params))
+
+    # ---- allocate ---------------------------------------------------------
+    budget = (1.0 - ccfg.ratio) * sum(s.dense_params for s in gspecs)
+    if ccfg.method == "drank":
+        kf = alloc.lagrange_allocate(gspecs, budget)
+        for qk, v in BETA_MAP:
+            kf = alloc.beta_rebalance(gspecs, kf, ccfg.beta,
+                                      qk_types=qk, v_type=v)
+        ks = alloc.integerize(gspecs, kf, budget,
+                              multiple=ccfg.rank_multiple)
+    elif ccfg.method == "dranke":
+        sig_map = {gid: svds[gid][1] for gid in svds}
+        ks = alloc.energy_allocate(gspecs, sig_map, budget,
+                                   multiple=ccfg.rank_multiple)
+    else:
+        ks = alloc.uniform_allocate(gspecs, ccfg.ratio,
+                                    multiple=ccfg.rank_multiple)
+
+    # ---- build factorized params -----------------------------------------
+    new_lp = copy.deepcopy(jax.tree.map(lambda x: x, lp))
+    pdt = jnp.dtype(cfg.param_dtype)
+    results: List[GroupResult] = []
+    expert_factors: Dict[Tuple, Dict[int, Tuple]] = {}
+
+    for g, gs in zip(groups, gspecs):
+        U, sig, Vt, wh = svds[g.gid]
+        k = ks[g.gid]
+        B, C = num.truncate_factors(U, sig, Vt, k, wh)
+        Bj = jnp.asarray(B, dtype=pdt)
+        for i, m in enumerate(g.members):
+            Ci = jnp.asarray(C[:, i * g.d_out:(i + 1) * g.d_out], dtype=pdt)
+            if m.expert is not None:
+                expert_factors.setdefault(m.path, {})[m.expert] = (Bj, Ci)
+            else:
+                node = _get_node(new_lp, m.path)
+                new_node = {"B": Bj, "C": Ci}
+                if "b" in node:
+                    new_node["b"] = node["b"]
+                parent = _get_node(new_lp, m.path[:-1])
+                parent[m.path[-1]] = new_node
+        results.append(GroupResult(
+            gid=g.gid, mtype=g.mtype,
+            layers=[m.layer for m in g.members],
+            expert=g.members[0].expert,
+            d_in=g.d_in, d_out=g.d_out, n=g.n, omega=g.omega,
+            reff=gs.reff, k=k, kmax=gs.kmax,
+            sigma_head=[float(s) for s in sig[:8]]))
+
+    # routed experts: restack with zero rank padding (exact)
+    for path, factors in expert_factors.items():
+        arr = _get_node(lp, path)
+        E = arr.shape[0]
+        rmax = max(f[0].shape[1] for f in factors.values())
+        d_in = arr.shape[1]
+        d_out = arr.shape[2]
+        Bs = np.zeros((E, d_in, rmax), dtype=np.float32)
+        Cs = np.zeros((E, rmax, d_out), dtype=np.float32)
+        for e in range(E):
+            if e in factors:
+                Be, Ce = factors[e]
+                r = Be.shape[1]
+                Bs[e, :, :r] = np.asarray(Be, dtype=np.float32)
+                Cs[e, :r, :] = np.asarray(Ce, dtype=np.float32)
+            else:   # padding experts (router-masked): keep zeros
+                pass
+        parent = _get_node(new_lp, path[:-1])
+        parent[path[-1]] = {"B": jnp.asarray(Bs, dtype=pdt),
+                            "C": jnp.asarray(Cs, dtype=pdt)}
+
+    summary = alloc.allocation_summary(gspecs, ks)
+    plan = Plan(config=ccfg, groups=results, summary=summary)
+    if ccfg.refine:
+        new_lp = refine_coefficients(lp, new_lp, cfg, groups, ks, svds,
+                                     calib_batches)
+    return new_lp, plan
+
+
+def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
+                        groups: List[Group], ks: Dict[str, int], svds: Dict,
+                        calib_batches: Sequence[Dict]) -> Params:
+    """Closed-form downstream update (the paper's ≥40% trick, after
+    SVD-LLM): re-collect Grams THROUGH the compressed model (inputs now
+    deviate from the originals) and re-solve each coefficient matrix
+
+        C_i* = argmin_C ‖X_new (W_i − B C)‖_F = (Bᵀ G B)⁻¹ Bᵀ G W_i .
+    """
+    col2 = calibrate(comp_lp, cfg, calib_batches)
+    for g in groups:
+        for i, m in enumerate(g.members):
+            if m.expert is not None or m.tag not in col2.gram:
+                continue
+            node = _get_node(comp_lp, m.path)
+            B = np.asarray(node["B"], dtype=np.float64)
+            G = col2.gram[m.tag]
+            W = _member_weight(orig_lp, m)
+            BtGB = B.T @ G @ B
+            BtGB += 1e-8 * np.trace(BtGB) / max(1, len(BtGB)) * np.eye(
+                B.shape[1])
+            C = np.linalg.solve(BtGB, B.T @ G @ W)
+            node["C"] = jnp.asarray(C, dtype=node["C"].dtype)
+    return comp_lp
+
+
+def compressed_param_count(list_params: Params) -> int:
+    """Parameter count with shared bases deduped by array identity."""
+    seen = set()
+    total = 0
+    for leaf in jax.tree.leaves(list_params):
+        if not hasattr(leaf, "size"):
+            continue
+        if id(leaf) in seen:
+            continue
+        seen.add(id(leaf))
+        total += leaf.size
+    return total

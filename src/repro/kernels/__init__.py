@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compression-critical hot spots:
+lowrank_matmul (fused x·B·C — the D-Rank deploy form), flash_attention
+(online-softmax, GQA, causal/window), gram (blocked XᵀX for calibration).
+`ops` holds the jit'd public wrappers; `ref` the pure-jnp oracles the
+interpret-mode tests assert against."""
+from repro.kernels import ops, ref  # noqa: F401

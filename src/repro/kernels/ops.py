@@ -1,0 +1,156 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: shape normalization (leading-dim flattening, padding to
+block multiples), block-size selection under the VMEM budget, interpret-mode
+fallback on CPU (correctness validation — this container has no TPU), and
+custom_vjp so compressed models remain trainable (backward falls back to
+the jnp reference formulation; forward-path fusion is the deploy win).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.gram import gram_blocked
+from repro.kernels.lowrank_matmul import lowrank_matmul_2d
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+# ---------------------------------------------------------------------------
+# lowrank_matmul: y = (x @ B) @ C
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def lowrank_matmul(x: jax.Array, B: jax.Array, C: jax.Array) -> jax.Array:
+    return _lowrank_fwd_impl(x, B, C)
+
+
+def _lowrank_fwd_impl(x, B, C):
+    *lead, K = x.shape
+    R = B.shape[-1]
+    N = C.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm = 128 if M >= 128 else _round_up(max(M, 8), 8)
+    bk = min(512, _round_up(K, 128))
+    bn = min(512, _round_up(N, 128))
+    xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    Bp = _pad_to(B.astype(x.dtype), 0, bk)
+    Cp = _pad_to(C.astype(x.dtype), 1, bn)
+    y = lowrank_matmul_2d(xp, Bp, Cp, bm=bm, bk=bk, bn=bn,
+                          interpret=not _on_tpu())
+    return y[:M, :N].reshape(*lead, N)
+
+
+def _lowrank_fwd(x, B, C):
+    return _lowrank_fwd_impl(x, B, C), (x, B, C)
+
+
+def _lowrank_bwd(res, g):
+    x, B, C = res
+    gf = g.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    t = xf @ B.astype(jnp.float32)                       # (..., R)
+    x2 = xf.reshape(-1, x.shape[-1])
+    t2 = t.reshape(-1, t.shape[-1])
+    g2 = gf.reshape(-1, g.shape[-1])
+    dC = (t2.T @ g2).astype(C.dtype)
+    gt = g2 @ C.astype(jnp.float32).T                    # (M, R)
+    dB = (x2.T @ gt).astype(B.dtype)
+    dx = (gt @ B.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    return dx, dB, dC
+
+
+lowrank_matmul.defvjp(_lowrank_fwd, _lowrank_bwd)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) -> (B, S, H, hd)."""
+    return _flash_fwd_impl(q, k, v, causal, window, softcap)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, softcap):
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    bq = min(128, _round_up(S, 8))
+    bk = min(128, _round_up(T, 8))
+    Sp, Tp = _round_up(S, bq), _round_up(T, bk)
+    qb = _pad_to(q.transpose(0, 2, 1, 3).reshape(B * H, S, hd), 1, bq)
+    kb = _pad_to(k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd), 1, bk)
+    vb = _pad_to(v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd), 1, bk)
+    # padded kv columns must never win the max: rely on position masking —
+    # padded kpos >= T only passes the mask when causal=False and window=0;
+    # force a window covering exactly the real T in that case.
+    win = window
+    causal_eff = causal
+    if not causal and not window and Tp != T:
+        kb = kb.at[:, T:].set(0)
+        vb = vb.at[:, T:].set(0)
+        # mask via explicit window over positions is wrong here; instead use
+        # causal=False with a "length mask" emulated by softcap-free -inf:
+        # simplest robust route: fall back to reference for ragged bidir.
+        o = ref.flash_attention(q, k, v, causal=causal, window=window,
+                                softcap=softcap)
+        return o
+    o = flash_attention_bh(qb, kb, vb, heads=H, kv_heads=KV,
+                           causal=causal_eff, window=win, bq=bq, bk=bk,
+                           softcap=softcap, interpret=not _on_tpu())
+    o = o[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, softcap):
+    return _flash_fwd_impl(q, k, v, causal, window, softcap), (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+def gram(x: jax.Array) -> jax.Array:
+    """x: (..., D) -> (D, D) fp32 Gram accumulated over all leading dims."""
+    D = x.shape[-1]
+    x2 = x.reshape(-1, D)
+    bi = bj = min(256, _round_up(D, 128))
+    bn = min(512, _round_up(x2.shape[0], 8))
+    xp = _pad_to(_pad_to(x2, 0, bn), 1, bi)
+    g = gram_blocked(xp, bi=bi, bj=bj, bn=bn, interpret=not _on_tpu())
+    return g[:D, :D]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel. The interpret-mode kernels are
+asserted allclose against these across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def lowrank_matmul(x: jax.Array, B: jax.Array, C: jax.Array) -> jax.Array:
+    """y = (x @ B) @ C.  x: (..., K); B: (K, R); C: (R, N)."""
+    t = x.astype(jnp.float32) @ B.astype(jnp.float32)
+    return (t @ C.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd); GQA via H = KV*G.
+    Returns (B, S, H, hd)."""
+    Bb, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(Bb, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg,
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(Bb, S, H, hd).astype(q.dtype)
+
+
+def gram(x: jax.Array) -> jax.Array:
+    """G = XᵀX with fp32 accumulation. x: (N, D) -> (D, D) fp32."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf

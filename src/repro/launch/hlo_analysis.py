@@ -1,0 +1,417 @@
+"""Static analyzer for post-SPMD optimized HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis does not scale
+``while``-loop bodies by their trip counts, so a lax.scan over 32 layers
+(or a chunked-attention nested scan) under-reports FLOPs and bytes by the
+trip factor. The dry-run's roofline terms need loop-aware totals, so we
+re-derive them from the HLO text, where XLA conveniently annotates
+``known_trip_count`` on every scan-lowered loop.
+
+What it computes, per device (the module is already SPMD-partitioned):
+  flops            2·M·N·K for every dot (+ convolutions via output×kernel)
+  hbm_bytes        fusion-boundary traffic: every top-level instruction
+                   writes its result once and reads its non-trivial
+                   operands once (fusions are a single node — their
+                   internals stay in registers/VMEM)
+  collective_bytes result bytes of all-gather/all-reduce/reduce-scatter/
+                   all-to-all/collective-permute (per collective family)
+All three are scaled by the product of enclosing-loop trip counts via
+multiplier propagation over the computation call graph (calls=, body=,
+condition=, to_apply=).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+((?:\([^{]*?\))|(?:\S+))\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[List[int]]]:
+    """Bytes + list of dim-lists of every array in the (tuple) type."""
+    total = 0
+    dims_all = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_all.append(ds)
+    return total, dims_all
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    result_bytes: int = 0
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    # call edges: (callee, trip_multiplier_for_callee, kind)
+    calls: List[Tuple[str, int, str]] = field(default_factory=list)
+
+
+_LAYOUT_RE = re.compile(r"\]\{[\d,]*\}")
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    hlo = _LAYOUT_RE.sub("]", hlo)      # strip layout annotations
+    for line in hlo.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{"):
+                head = line.split("(")[0]
+                if " = " not in head:
+                    m = _HEADER_RE.match(line)
+                    if m:
+                        cur = Computation(m.group(1))
+                        if line.lstrip().startswith("ENTRY"):
+                            entry_name = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, tstr, op, rest = m.groups()
+        rb, _ = _shape_info(tstr)
+        inst = Instr(name=name, type_str=tstr, op=op, rest=rest,
+                     result_bytes=rb)
+        cur.instrs.append(inst)
+        # call edges
+        trip = 1
+        tm = _TRIP_RE.search(line)
+        if op == "while":
+            trip = int(tm.group(1)) if tm else 1
+        kind = "while" if op == "while" else "inline"
+        for cm in _CALLED_RE.finditer(line):
+            cur.calls.append((cm.group(1), trip if op == "while" else 1,
+                              kind))
+        for cm in _BRANCHES_RE.finditer(line):
+            for callee in re.split(r",\s*%?", cm.group(1)):
+                if callee.strip():
+                    cur.calls.append((callee.strip().lstrip("%"), 1, kind))
+    if entry_name is not None and entry_name in comps:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]
+                 ) -> Tuple[Dict[str, int], set]:
+    """Returns (per-computation trip multiplier, set of top-level
+    computations). Top-level = entry + while bodies/conditions reached
+    transitively through while edges (their instructions touch HBM);
+    everything else is fusion/reduction internals."""
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {c: 1 for c in comps}, set(comps)
+    mult: Dict[str, int] = {entry.name: 1}
+    top = {entry.name}
+    frontier = [entry.name]
+    guard = 0
+    while frontier and guard < 100000:
+        guard += 1
+        cname = frontier.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        base = mult.get(cname, 1)
+        for callee, trip, kind in comp.calls:
+            m = base * trip
+            if kind == "while" and cname in top:
+                top.add(callee)
+            if m > mult.get(callee, 0):
+                mult[callee] = m
+                frontier.append(callee)
+    return mult, top
+
+
+def _dot_flops(inst: Instr, symtab: Dict[str, List[int]]) -> float:
+    """2 × prod(result dims) × contracted size (batch dims are in result)."""
+    _, res_dims = _shape_info(inst.type_str)
+    if not res_dims:
+        return 0.0
+    out_elems = 1
+    for d in res_dims[0]:
+        out_elems *= d
+    # contracted size from lhs shape + lhs_contracting_dims
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    ops = re.findall(r"%([\w\.\-]+)", inst.rest.split(")")[0])
+    csize = 1
+    if mc and ops:
+        lhs_dims = symtab.get(ops[0])
+        if lhs_dims:
+            for ax in mc.group(1).split(","):
+                if ax and int(ax) < len(lhs_dims):
+                    csize *= lhs_dims[int(ax)]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(inst: Instr, symtab: Dict[str, List[int]]) -> float:
+    _, res_dims = _shape_info(inst.type_str)
+    if not res_dims:
+        return 0.0
+    out_elems = 1
+    for d in res_dims[0]:
+        out_elems *= d
+    ops = re.findall(r"%([\w\.\-]+)", inst.rest.split(")")[0])
+    if len(ops) >= 2 and symtab.get(ops[1]):
+        kelems = 1
+        for d in symtab[ops[1]]:
+            kelems *= d
+        # divide by output-feature dim (already in out_elems)
+        kd = symtab[ops[1]]
+        of = max(kd[-1], 1) if kd else 1
+        return 2.0 * out_elems * (kelems / of)
+    return 0.0
+
+
+# ops whose results a TPU compiler keeps in registers/VMEM by fusing into
+# the consumer; everything else materializes in HBM
+_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "power", "negate", "abs",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "sqrt", "rsqrt", "cbrt", "sine", "cosine", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "is-finite", "not", "and",
+    "or", "xor", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "maximum", "minimum", "compare", "select",
+    "clamp", "convert", "bitcast-convert", "broadcast", "reshape",
+    "bitcast", "transpose", "slice", "iota", "constant", "reverse",
+    "map", "expand", "real", "imag", "complex", "reduce-precision",
+    "stochastic-convert", "copy-start", "copy-done",
+}
+_ALIAS = {"tuple", "get-tuple-element", "while", "conditional",
+          "parameter", "after-all", "opt-barrier", "partition-id",
+          "replica-id", "domain", "token"}
+
+
+# ops that read/write only their WINDOW, not their full operand/result:
+# dynamic-slice reads as many bytes as it produces; dynamic-update-slice
+# writes (and reads) only the update operand — the big buffer is aliased.
+_WINDOW_READ = {"dynamic-slice", "gather"}
+_WINDOW_WRITE = {"dynamic-update-slice", "scatter"}
+
+
+_CALLS_ONE_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+# fusions made ONLY of these ops are dtype/layout plumbing; on TPU the dot
+# consumes the original value natively (the CPU backend promotes bf16
+# matmuls to f32 and hoists whole-weight converts — a backend artifact the
+# roofline must not count)
+_PLUMBING = {"parameter", "convert", "copy", "bitcast", "bitcast-convert",
+             "reshape", "transpose", "broadcast", "constant", "tuple"}
+
+
+def _fusion_kind(inst: Instr, comps: Dict[str, "Computation"]) -> str:
+    """Classify a fusion by its internals: 'dus' (in-place windowed write,
+    e.g. a KV-cache update — the big buffer is donated/aliased), 'slice'
+    (windowed extraction), 'convert' (dtype/layout plumbing — alias), or
+    'dense'."""
+    m = _CALLS_ONE_RE.search(inst.rest)
+    if not m:
+        return "dense"
+    callee = comps.get(m.group(1))
+    if callee is None:
+        return "dense"
+    ops = {i.op for i in callee.instrs}
+    if ops <= _PLUMBING:
+        return "convert"
+    if "dynamic-update-slice" in ops:
+        return "dus"
+    if ("dynamic-slice" in ops or "gather" in ops) and \
+            not ops & {"dot", "dot-general", "convolution"}:
+        return "slice"
+    return "dense"
+
+
+def _comp_hbm(comp: Computation, comps: Dict[str, "Computation"],
+              pallas_flash: bool = False) -> float:
+    """Ideal-fusion HBM bytes for one execution of a top-level computation.
+
+    pallas_flash=True additionally models the fused attention kernel: a dot
+    whose result feeds (through fusible chains) ONLY other dots in the same
+    computation is VMEM-resident — neither its write nor those reads touch
+    HBM. This is exactly what kernels/flash_attention.py and
+    kernels/lowrank_matmul.py do on real hardware.
+    """
+    instrs = {i.name: i for i in comp.instrs}
+    fkind = {i.name: _fusion_kind(i, comps) for i in comp.instrs
+             if i.op == "fusion"}
+
+    operand_cache: Dict[str, Tuple[str, ...]] = {}
+
+    def operands(name: str) -> Tuple[str, ...]:
+        if name not in operand_cache:
+            inst = instrs[name]
+            ostr = inst.rest.split(")")[0]
+            operand_cache[name] = tuple(
+                o for o in re.findall(r"%([\w\.\-]+)", ostr) if o in instrs)
+        return operand_cache[name]
+
+    def _transparent(inst: Instr) -> bool:
+        return inst.op in _FUSIBLE or fkind.get(inst.name) == "convert"
+
+    resolve_cache: Dict[str, frozenset] = {}
+
+    def resolve(name: str, depth: int = 0) -> frozenset:
+        """Materialized source values feeding `name` through fusible ops."""
+        if name in resolve_cache:
+            return resolve_cache[name]
+        if depth > 64:
+            return frozenset({name})
+        inst = instrs[name]
+        if _transparent(inst):
+            out = frozenset().union(*[resolve(o, depth + 1)
+                                      for o in operands(name)]) \
+                if operands(name) else frozenset()
+        elif inst.op in ("tuple", "while", "conditional"):
+            out = frozenset()      # elements flow via get-tuple-element
+        else:
+            out = frozenset({name})
+        resolve_cache[name] = out
+        return out
+
+    material = [i for i in comp.instrs
+                if not _transparent(i) and i.op not in _ALIAS
+                and not i.op.endswith("-done")]
+    src_map = {i.name: (frozenset().union(
+        *[resolve(o, 1) for o in operands(i.name)])
+        if operands(i.name) else frozenset()) for i in material}
+
+    vmem: frozenset = frozenset()
+    if pallas_flash:
+        # dots read only by dots/reduces -> resident (the flash kernel keeps
+        # the score tile, its row-max/sum reductions, and the PV matmul all
+        # in VMEM; same for lowrank_matmul's rank-k intermediate)
+        def is_reduce_like(i: Instr) -> bool:
+            if i.op in ("reduce", "reduce-window"):
+                return True
+            if i.op != "fusion":
+                return False
+            m = _CALLS_ONE_RE.search(i.rest)
+            callee = comps.get(m.group(1)) if m else None
+            if callee is None:
+                return False
+            ops = {x.op for x in callee.instrs}
+            return bool(ops & {"reduce", "reduce-window"}) and \
+                not ops & {"dot", "dot-general", "convolution"}
+
+        dot_names = {i.name for i in material
+                     if i.op in ("dot", "dot-general")}
+        fused_ok = dot_names | {i.name for i in material
+                                if is_reduce_like(i)}
+        consumers: Dict[str, set] = {}
+        for i in material:
+            for s in src_map[i.name]:
+                consumers.setdefault(s, set()).add(i.name)
+        vmem = frozenset(
+            d for d in dot_names
+            if consumers.get(d) and consumers[d] <= fused_ok)
+
+    total = 0.0
+    for inst in material:
+        kind = "dense"
+        if inst.op in _WINDOW_WRITE:
+            kind = "dus"
+        elif inst.op in _WINDOW_READ:
+            kind = "slice"
+        elif inst.op == "fusion":
+            kind = _fusion_kind(inst, comps)
+
+        srcs = src_map[inst.name]
+        max_src = max((instrs[s].result_bytes for s in srcs), default=0)
+        sum_src = sum(instrs[s].result_bytes for s in srcs)
+        # ---- write ---------------------------------------------------------
+        if inst.name in vmem:
+            pass
+        elif kind == "dus":
+            # in-place window update: writes ~ (result - aliased buffer)
+            total += max(inst.result_bytes - max_src, 0)
+        else:
+            total += inst.result_bytes
+        # ---- reads ---------------------------------------------------------
+        if kind == "slice":
+            total += inst.result_bytes        # reads what it produces
+        elif kind == "dus":
+            total += max(sum_src - max_src, 0)   # the update, not the buffer
+        else:
+            for s in srcs:
+                if s in vmem:
+                    continue
+                total += instrs[s].result_bytes
+    return total
+
+
+def analyze(hlo: str, pallas_flash: bool = False) -> Dict:
+    comps = parse_module(hlo)
+    mult, top_level = _multipliers(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll: Dict[str, float] = {}
+    coll_total = 0.0
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue        # unreachable
+        # symbol table: instr name -> (dims of first array, result bytes)
+        symtab: Dict[str, List[int]] = {}
+        rbytes: Dict[str, int] = {}
+        for inst in comp.instrs:
+            _, dims = _shape_info(inst.type_str)
+            symtab[inst.name] = dims[0] if dims else []
+            rbytes[inst.name] = inst.result_bytes
+
+        for inst in comp.instrs:
+            if inst.op in ("dot", "dot-general"):
+                flops += m * _dot_flops(inst, symtab)
+            elif inst.op == "convolution":
+                flops += m * _conv_flops(inst, symtab)
+            base = inst.op[:-6] if inst.op.endswith("-start") else inst.op
+            if base in _COLLECTIVES and not inst.op.endswith("-done"):
+                b = m * inst.result_bytes
+                coll[base] = coll.get(base, 0.0) + b
+                coll_total += b
+
+        # HBM traffic (ideal-fusion model): only MATERIALIZED values touch
+        # HBM. Elementwise/shape ops fuse into their consumers (as the TPU
+        # compiler does), so a read through a fusible chain resolves back
+        # to its materialized sources. Tuples/while carries are aliases.
+        if cname in top_level:
+            hbm += m * _comp_hbm(comp, comps, pallas_flash=pallas_flash)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "multipliers": {k: v for k, v in mult.items() if v > 1},
+    }

@@ -1,0 +1,457 @@
+"""Attention: GQA/MHA with RoPE / M-RoPE, qk-norm, sliding windows,
+full-sequence (train/prefill) and cached single-token (decode) paths.
+
+The jnp einsum formulation is the reference path (and what the dry-run
+lowers); a Pallas flash-attention kernel (repro/kernels/flash_attention.py)
+is the TPU production path, toggled via ``params.set_use_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import rotary
+from repro.models.params import (Builder, apply_linear, head_rms_norm,
+                                 softcap, use_pallas)
+
+NEG_INF = -1e30
+
+
+def init_attention(b: Builder, cfg: ModelConfig, stack: Tuple[int, ...] = (),
+                   cross: bool = False) -> None:
+    heads_ax = "heads" if cfg.shard_attn_heads else "fsdp"
+    kv_ax = "kv_heads" if cfg.shard_attn_heads else "fsdp"
+    bias = cfg.family == "vlm"   # qwen2-vl carries qkv bias
+    b.linear("wq", cfg.d_model, cfg.q_dim, ("fsdp", heads_ax), stack, bias=bias)
+    b.linear("wk", cfg.d_model, cfg.kv_dim, ("fsdp", kv_ax), stack, bias=bias)
+    b.linear("wv", cfg.d_model, cfg.kv_dim, ("fsdp", kv_ax), stack, bias=bias)
+    b.linear("wo", cfg.q_dim, cfg.d_model, (heads_ax, "fsdp"), stack,
+             scale=0.02 / max(1, cfg.n_layers) ** 0.5)
+    if cfg.qk_norm and not cross:
+        b.ones("q_norm", (*stack, cfg.head_dim), ((None,) * len(stack)) + (None,))
+        b.ones("k_norm", (*stack, cfg.head_dim), ((None,) * len(stack)) + (None,))
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qkv(p: Dict, cfg: ModelConfig, x: jax.Array,
+         angles: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = _split_heads(apply_linear(p["wq"], x), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(apply_linear(p["wk"], x), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(apply_linear(p["wv"], x), cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm and "q_norm" in p:
+        q = head_rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = head_rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        q = rotary.apply_rope(q, angles)
+        k = rotary.apply_rope(k, angles)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: jax.Array) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask: broadcastable (B,1,S,T) bool.
+    Grouped-query: H = K*G. Returns (B,S,H*hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, K, G, hd)
+    # keep bf16 inputs, fp32 accumulation: numerically identical to
+    # upcasting (bf16->f32 is exact) but never materializes fp32 copies of
+    # the KV cache (§Perf cell-A finding)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)   # mask (B,K?,S,T)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype).reshape(B, S, H * hd)
+
+
+# Use the chunked (flash-style) path once the score matrix would exceed
+# this many elements per (batch, head) — beyond it, materializing S×T
+# scores dominates the memory roofline term.
+FLASH_THRESHOLD = 1024 * 2048
+
+
+def _tile_mask(qi, ki, bq: int, bk: int, causal: bool, window: int):
+    qpos = qi * bq + jnp.arange(bq)[:, None]
+    kpos = ki * bk + jnp.arange(bk)[None, :]
+    msk = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        msk &= kpos <= qpos
+    if window:
+        msk &= kpos > qpos - window
+    return msk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash_core(causal: bool, window: int, bq: int, bk: int, G: int,
+                qg: jax.Array, k: jax.Array, v: jax.Array):
+    """Flash attention core. qg: (B,S,K,G,hd) PRE-SCALED fp32;
+    k/v: (B,T,K,hd) fp32. Returns out (B,S,K,G,hd) fp32."""
+    out, _ = _flash_fwd_pass(causal, window, bq, bk, qg, k, v)
+    return out
+
+
+def _tile_pairs(nq: int, nk: int, bq: int, bk: int, causal: bool,
+                window: int):
+    """Static enumeration of (q-tile, kv-tile) pairs with any live entry —
+    fully-masked tiles are never visited (causal: ~2× fewer; sliding
+    window: O(S·window) instead of O(S²))."""
+    pairs = []
+    for qi in range(nq):
+        q_lo, q_hi = qi * bq, qi * bq + bq - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * bk, ki * bk + bk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window and k_hi < q_lo - window + 1:
+                continue
+            pairs.append((qi, ki))
+    return pairs
+
+
+def _flash_fwd_pass(causal, window, bq, bk, qg, k, v):
+    B, S, K, G, hd = qg.shape
+    T = k.shape[1]
+    nq, nk = S // bq, T // bk
+    qc = jnp.moveaxis(qg.reshape(B, nq, bq, K, G, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, bk, K, hd), 1, 0)
+
+    pairs = _tile_pairs(nq, nk, bq, bk, causal, window)
+    qi_a = jnp.array([p[0] for p in pairs], dtype=jnp.int32)
+    ki_a = jnp.array([p[1] for p in pairs], dtype=jnp.int32)
+    first = jnp.array([i == 0 or pairs[i][0] != pairs[i - 1][0]
+                       for i in range(len(pairs))])
+    last = jnp.array([i == len(pairs) - 1 or pairs[i][0] != pairs[i + 1][0]
+                      for i in range(len(pairs))])
+
+    m0 = jnp.full((B, K, G, bq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, K, G, bq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, K, G, bq, hd), dtype=jnp.float32)
+    out0 = jnp.zeros((nq, B, K, G, bq, hd), dtype=jnp.float32)
+    lse0 = jnp.zeros((nq, B, K, G, bq), dtype=jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc, outb, lseb = carry
+        qi, ki, fst, lst = xs
+        qb = jax.lax.dynamic_index_in_dim(qc, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ki, 0, keepdims=False)
+        m = jnp.where(fst, m0, m)
+        l = jnp.where(fst, l0, l)
+        acc = jnp.where(fst, a0, acc)
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb,
+                       preferred_element_type=jnp.float32)
+        msk = _tile_mask(qi, ki, bq, bk, causal, window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkh->bkgqh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        lq = jnp.maximum(l_new, 1e-30)
+        tile_out = acc_new / lq[..., None]
+        tile_lse = m_new + jnp.log(lq)
+        cur_o = jax.lax.dynamic_index_in_dim(outb, qi, 0, keepdims=False)
+        cur_s = jax.lax.dynamic_index_in_dim(lseb, qi, 0, keepdims=False)
+        outb = jax.lax.dynamic_update_index_in_dim(
+            outb, jnp.where(lst, tile_out, cur_o), qi, 0)
+        lseb = jax.lax.dynamic_update_index_in_dim(
+            lseb, jnp.where(lst, tile_lse, cur_s), qi, 0)
+        return (m_new, l_new, acc_new, outb, lseb), None
+
+    (_, _, _, outs, lses), _ = jax.lax.scan(
+        step, (m0, l0, a0, out0, lse0), (qi_a, ki_a, first, last))
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, K, G, S, hd)      # (B,K,G,S,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, K, G, hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, K, G, S)
+    return out, lse
+
+
+def _flash_fwd_rule(causal, window, bq, bk, G, qg, k, v):
+    out, lse = _flash_fwd_pass(causal, window, bq, bk, qg, k, v)
+    return out, (qg, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, bq, bk, G, res, dout):
+    """FlashAttention-2-style backward: probabilities are recomputed per
+    tile from (q, k, lse); nothing S×T ever materializes. Two passes:
+    k-outer for (dk, dv), q-outer for dq."""
+    qg, k, v, out, lse = res
+    B, S, K, Gd, hd = qg.shape
+    T = k.shape[1]
+    nq, nk = S // bq, T // bk
+    D = jnp.sum(dout * out, axis=-1)                      # (B,S,K,G)
+    Dr = jnp.moveaxis(D.reshape(B, S, K, Gd), 1, 3)       # (B,K,G,S)
+    do_r = jnp.moveaxis(dout, 1, 3)                       # (B,K,G,S,hd)
+
+    qc = jnp.moveaxis(qg.reshape(B, nq, bq, K, Gd, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, bk, K, hd), 1, 0)
+    lse_c = jnp.moveaxis(lse.reshape(B, K, Gd, nq, bq), 3, 0)   # (nq,B,K,G,bq)
+    D_c = jnp.moveaxis(Dr.reshape(B, K, Gd, nq, bq), 3, 0)
+    do_c = jnp.moveaxis(do_r.reshape(B, K, Gd, nq, bq, hd), 3, 0)
+
+    def p_tile(qb, kb, lse_b, qi, ki):
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb,
+                       preferred_element_type=jnp.float32)
+        msk = _tile_mask(qi, ki, bq, bk, causal, window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        return jnp.exp(s - lse_b[..., None])              # (B,K,G,bq,bk)
+
+    def idx(a, i):
+        return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+    # ---- pass 1: dk, dv (pairs grouped by k tile) -------------------------
+    pairs_k = sorted(_tile_pairs(nq, nk, bq, bk, causal, window),
+                     key=lambda p: (p[1], p[0]))
+    qi_k = jnp.array([p[0] for p in pairs_k], dtype=jnp.int32)
+    ki_k = jnp.array([p[1] for p in pairs_k], dtype=jnp.int32)
+    fst_k = jnp.array([i == 0 or pairs_k[i][1] != pairs_k[i - 1][1]
+                       for i in range(len(pairs_k))])
+    lst_k = jnp.array([i == len(pairs_k) - 1
+                       or pairs_k[i][1] != pairs_k[i + 1][1]
+                       for i in range(len(pairs_k))])
+    zk = jnp.zeros((B, bk, K, hd), dtype=jnp.float32)
+    dk0 = jnp.zeros((nk, B, bk, K, hd), dtype=jnp.float32)
+
+    def k_step(carry, xs):
+        dk_acc, dv_acc, dkb, dvb = carry
+        qi, ki, fst, lst = xs
+        dk_acc = jnp.where(fst, zk, dk_acc)
+        dv_acc = jnp.where(fst, zk, dv_acc)
+        qb, kb, vb = idx(qc, qi), idx(kc, ki), idx(vc, ki)
+        lse_b, D_b, do_b = idx(lse_c, qi), idx(D_c, qi), idx(do_c, qi)
+        p = p_tile(qb, kb, lse_b, qi, ki)
+        dv_acc = dv_acc + jnp.einsum("bkgqt,bkgqh->btkh", p, do_b)
+        dp = jnp.einsum("bkgqh,btkh->bkgqt", do_b, vb)
+        ds = p * (dp - D_b[..., None])
+        dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgh->btkh", ds, qb)
+        dkb = jax.lax.dynamic_update_index_in_dim(
+            dkb, jnp.where(lst, dk_acc, idx(dkb, ki)), ki, 0)
+        dvb = jax.lax.dynamic_update_index_in_dim(
+            dvb, jnp.where(lst, dv_acc, idx(dvb, ki)), ki, 0)
+        return (dk_acc, dv_acc, dkb, dvb), None
+
+    (_, _, dks, dvs), _ = jax.lax.scan(
+        k_step, (zk, zk, dk0, dk0), (qi_k, ki_k, fst_k, lst_k))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, K, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, K, hd)
+
+    # ---- pass 2: dq (pairs grouped by q tile) -----------------------------
+    pairs_q = _tile_pairs(nq, nk, bq, bk, causal, window)
+    qi_q = jnp.array([p[0] for p in pairs_q], dtype=jnp.int32)
+    ki_q = jnp.array([p[1] for p in pairs_q], dtype=jnp.int32)
+    fst_q = jnp.array([i == 0 or pairs_q[i][0] != pairs_q[i - 1][0]
+                       for i in range(len(pairs_q))])
+    lst_q = jnp.array([i == len(pairs_q) - 1
+                       or pairs_q[i][0] != pairs_q[i + 1][0]
+                       for i in range(len(pairs_q))])
+    zq = jnp.zeros((B, bq, K, Gd, hd), dtype=jnp.float32)
+    dq0 = jnp.zeros((nq, B, bq, K, Gd, hd), dtype=jnp.float32)
+
+    def q_step(carry, xs):
+        dq_acc, dqb = carry
+        qi, ki, fst, lst = xs
+        dq_acc = jnp.where(fst, zq, dq_acc)
+        qb, kb, vb = idx(qc, qi), idx(kc, ki), idx(vc, ki)
+        lse_b, D_b, do_b = idx(lse_c, qi), idx(D_c, qi), idx(do_c, qi)
+        p = p_tile(qb, kb, lse_b, qi, ki)
+        dp = jnp.einsum("bkgqh,btkh->bkgqt", do_b, vb)
+        ds = p * (dp - D_b[..., None])
+        dq_acc = dq_acc + jnp.einsum("bkgqt,btkh->bqkgh", ds, kb)
+        dqb = jax.lax.dynamic_update_index_in_dim(
+            dqb, jnp.where(lst, dq_acc, idx(dqb, qi)), qi, 0)
+        return (dq_acc, dqb), None
+
+    (_, dqs), _ = jax.lax.scan(q_step, (zq, dq0),
+                               (qi_q, ki_q, fst_q, lst_q))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, K, Gd, hd)
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash_core.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _sdpa_flash_jnp(cfg: ModelConfig, q: jax.Array, k: jax.Array,
+                    v: jax.Array, *, causal: bool, window: int,
+                    bq: int = 512, bk: int = 1024) -> jax.Array:
+    """XLA-native flash attention: nested lax.scan over (q-chunks, k-chunks)
+    with an online-softmax carry — the score matrix never materializes
+    beyond one (bq × bk) tile per head, in EITHER direction (custom_vjp
+    recomputes probability tiles in the backward pass, FlashAttention-2
+    style). This is the TPU-honest lowering for long sequences when the
+    Pallas kernel is off (dry-run / CPU) and mirrors what the Pallas kernel
+    does in VMEM.
+
+    No logit softcap support here — archs with softcap take the _sdpa path.
+    """
+    assert not cfg.attn_logit_softcap, "flash path has no softcap"
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    # stay in the input dtype (bf16 on TPU) with fp32 accumulation inside
+    # the tiles — no fp32 copies of q/k/v ever materialize
+    qg = (q.reshape(B, S, K, G, hd) * jnp.asarray(scale, q.dtype))
+    out = _flash_core(causal, window, bq, bk, G, qg, k, v)
+    return out.reshape(B, S, H * hd).astype(v.dtype)
+
+
+def full_mask(B: int, S: int, T: int, q_offset, causal: bool,
+              window: int = 0) -> jax.Array:
+    """(B, 1, S, T) boolean mask. q position i attends kv position j."""
+    qpos = jnp.arange(S)[:, None] + q_offset          # absolute q positions
+    kpos = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), dtype=bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return jnp.broadcast_to(m[None, None], (B, 1, S, T))
+
+
+def attend_full(p: Dict, cfg: ModelConfig, x: jax.Array,
+                angles: Optional[jax.Array], *, causal: bool = True,
+                window: int = 0,
+                kv: Optional[Tuple[jax.Array, jax.Array]] = None) -> jax.Array:
+    """Train/prefill attention over the full sequence (or cross-attention
+    when kv=(k_src, v_src) activations are given)."""
+    B, S, _ = x.shape
+    if kv is None:
+        q, k, v = _qkv(p, cfg, x, angles)
+        mask = full_mask(B, S, S, 0, causal, window)
+    else:
+        q = _split_heads(apply_linear(p["wq"], x), cfg.n_heads, cfg.head_dim)
+        src_k, src_v = kv
+        k = _split_heads(apply_linear(p["wk"], src_k), cfg.n_kv_heads, cfg.head_dim)
+        v = _split_heads(apply_linear(p["wv"], src_v), cfg.n_kv_heads, cfg.head_dim)
+        if angles is not None:
+            q = rotary.apply_rope(q, angles)
+        mask = jnp.ones((B, 1, S, k.shape[1]), dtype=bool)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if use_pallas() and kv is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cfg.attn_logit_softcap)
+        out = out.reshape(B, S, cfg.q_dim)
+    elif kv is None and _use_flash_jnp(S, k.shape[1]):
+        out = _sdpa_flash_jnp(cfg, q, k, v, causal=causal, window=window)
+    else:
+        out = _sdpa(cfg, q, k, v, mask)
+    out = constrain(out, "batch", None, "heads")
+    return apply_linear(p["wo"], out)
+
+
+def _use_flash_jnp(S: int, T: int, bq: int = 512, bk: int = 1024) -> bool:
+    return (S * T >= FLASH_THRESHOLD
+            and S % min(bq, S) == 0 and T % min(bk, T) == 0)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a cache)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                  dtype) -> Dict:
+    """Full cache when window==0, else ring buffer of size window."""
+    length = window if window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+    }
+
+
+def attend_decode(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                  cache: Dict, angles: Optional[jax.Array], *,
+                  window: int = 0,
+                  cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  ) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,D); pos: (B,) int32 per-sequence positions of the new token.
+    Returns (out, cache)."""
+    B = x.shape[0]
+    if cross_kv is not None:
+        q = _split_heads(apply_linear(p["wq"], x), cfg.n_heads, cfg.head_dim)
+        k, v = cross_kv     # precomputed (B, T_enc, K, hd)
+        mask = jnp.ones((B, 1, 1, k.shape[1]), dtype=bool)
+        out = _sdpa(cfg, q, k, v, mask)
+        return apply_linear(p["wo"], out), cache
+
+    q, k_new, v_new = _qkv(p, cfg, x, angles)
+    L = cache["k"].shape[1]
+    rows = jnp.arange(B)
+    slot = jnp.mod(pos, L) if window else pos          # (B,)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    kpos = jnp.arange(L)[None, :]                      # (1, L)
+    pcol = pos[:, None]
+    if window:
+        # ring buffer: valid slots hold positions in (pos-window, pos]
+        age = jnp.mod(pcol - kpos, L)
+        valid = age < jnp.minimum(pcol + 1, L)
+    else:
+        valid = kpos <= pcol
+    mask = valid[:, None, None, :]                     # (B,1,1,L)
+    k = constrain(k, "batch", "kv_seq" if not window else None, None, None)
+    v = constrain(v, "batch", "kv_seq" if not window else None, None, None)
+    out = _sdpa(cfg, q, k, v, mask)
+    out = apply_linear(p["wo"], out)
+    return out, {"k": k, "v": v}
+
+
+def attend_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
+                   angles: Optional[jax.Array], *, causal: bool = True,
+                   window: int = 0, max_len: int = 0,
+                   ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence attention that also materializes the decode cache.
+
+    Full cache: k/v placed at [0, S) of a (B, max_len, ...) buffer.
+    Windowed: ring layout — the last `window` tokens land at slot pos%window.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, angles)
+    if use_pallas():
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cfg.attn_logit_softcap)
+        out = out.reshape(B, S, cfg.q_dim)
+    elif _use_flash_jnp(S, S):
+        out = _sdpa_flash_jnp(cfg, q, k, v, causal=causal, window=window)
+    else:
+        mask = full_mask(B, S, S, 0, causal, window)
+        out = _sdpa(cfg, q, k, v, mask)
+    out = apply_linear(p["wo"], out)
+
+    L = window if window else max_len
+    ck = jnp.zeros((B, L, cfg.n_kv_heads, cfg.head_dim), dtype=k.dtype)
+    cv = jnp.zeros_like(ck)
+    if window and S > window:
+        tail = jnp.arange(S - window, S)
+        ck = ck.at[:, tail % window].set(k[:, tail])
+        cv = cv.at[:, tail % window].set(v[:, tail])
+    else:
+        n = min(S, L)
+        ck = ck.at[:, :n].set(k[:, S - n:])
+        cv = cv.at[:, :n].set(v[:, S - n:])
+    ck = constrain(ck, "batch", "kv_seq" if not window else None, None, None)
+    cv = constrain(cv, "batch", "kv_seq" if not window else None, None, None)
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,189 @@
+"""Chunked linear-recurrence engine (TPU-native).
+
+One engine powers every O(1)-state sequence mixer in the framework:
+
+  * xLSTM mLSTM   — matrix memory ``S_t = f_t S_{t-1} + i_t v_t k_t^T`` with
+    stabilized exponential gating and the ``max(|n^T q|, 1)`` normalizer.
+  * Mamba-2 / SSD — per-head scalar decay ``S_t = a_t S_{t-1} + (Δu)_t B_t^T``
+    read out with C_t (q := C, k := B, v := Δ·u, no input gate / normalizer).
+
+Instead of a per-step ``lax.scan`` (sequential, VPU-bound, and invisible to
+XLA cost analysis through the loop trip count), sequences are processed in
+chunks of length ``L``: intra-chunk interactions become an (L×L)-masked
+matmul pair (MXU work), and only the O(S/L) inter-chunk state recurrence is
+scanned. This is the standard chunked linear-attention factorization — exact,
+not an approximation.
+
+Numerical stabilization: all gates live in log space. A running max ``m`` is
+carried across chunks; the matrix state and normalizer are stored rescaled by
+``exp(-m)`` so exponentials stay bounded. The mLSTM denominator
+``max(|n^T q|, 1)`` becomes ``max(|ñ^T q|, exp(-m))`` in rescaled
+coordinates, which is exact.
+
+Shapes (all functions):
+  q : (B, S, H, dk)      k : (B, S, H, dk)      v : (B, S, H, dv)
+  log_f : (B, S, H)  per-step log forget gate (must be <= 0 for stability;
+                     callers pass log(sigmoid(.)) or Δ·A with A < 0)
+  log_i : (B, S, H)  per-step log input gate (unbounded; stabilized here)
+State: S (B, H, dv, dk), n (B, H, dk), m (B, H).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+class ScanState(NamedTuple):
+    S: jax.Array          # (B, H, dv, dk) rescaled matrix memory
+    n: jax.Array          # (B, H, dk)    rescaled normalizer (mLSTM only)
+    m: jax.Array          # (B, H)        running log-max stabilizer
+
+
+def init_state(batch: int, heads: int, dk: int, dv: int,
+               dtype=jnp.float32) -> ScanState:
+    return ScanState(
+        S=jnp.zeros((batch, heads, dv, dk), dtype=dtype),
+        n=jnp.zeros((batch, heads, dk), dtype=dtype),
+        m=jnp.full((batch, heads), 0.0, dtype=dtype),
+    )
+
+
+def _chunk(x: jax.Array, L: int) -> jax.Array:
+    """(B, S, ...) -> (B, S//L, L, ...)."""
+    B, S = x.shape[:2]
+    return x.reshape(B, S // L, L, *x.shape[2:])
+
+
+def chunked_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                 log_f: jax.Array, log_i: jax.Array,
+                 state: Optional[ScanState] = None,
+                 *, chunk: int = 128, normalize: bool = False,
+                 ) -> Tuple[jax.Array, ScanState]:
+    """Exact chunked linear recurrence. Returns (y (B,S,H,dv), final state).
+
+    y_t = (S_t q_t) / denom_t      with S_t = exp(log_f_t) S_{t-1}
+                                          + exp(log_i_t) v_t k_t^T
+    denom_t = max(|n_t^T q_t|, 1) when normalize else 1.
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    if S % L:
+        pad = L - S % L
+        zf = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        # padded steps: forget=1 (log 0), input gate -inf (contribute nothing)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=NEG)
+    Sp = q.shape[1]
+    if state is None:
+        state = init_state(B, H, dk, dv)
+
+    cdt = jnp.float32
+    qc = _chunk(q, L).astype(cdt)
+    kc = _chunk(k, L).astype(cdt)
+    vc = _chunk(v, L).astype(cdt)
+    lfc = _chunk(log_f, L).astype(cdt)      # (B, C, L, H)
+    lic = _chunk(log_i, L).astype(cdt)
+
+    def step(carry: ScanState, xs):
+        qb, kb, vb, lf, li = xs              # (B,L,H,dk), ..., (B,L,H)
+        S0, n0, m0 = carry.S, carry.n, carry.m
+        F = jnp.cumsum(lf, axis=1)           # (B,L,H) decay chunk-start..j incl
+        FL = F[:, -1]                        # (B,H) total chunk decay
+        w = li - F                           # source log-weight per step τ
+        # per-step stabilizer M_j = max(m0, cummax_{τ<=j} w_τ)
+        M = jnp.maximum(m0[:, None], jax.lax.cummax(w, axis=1))   # (B,L,H)
+        m_new = jnp.maximum(m0 + FL, jnp.max(w, axis=1) + FL)     # (B,H)
+
+        # ---- intra-chunk attention-style term -----------------------------
+        # A[j,τ] = exp(F_j - F_τ + li_τ - (F_j + M_j)) = exp(w_τ - M_j), τ<=j
+        # clamp BEFORE exp: masked (future) entries can overflow, and
+        # where(mask, inf, 0) poisons the backward pass with inf*0 = NaN.
+        logA = w[:, None, :, :] - M[:, :, None, :]       # (B, j, τ, H)
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+        logA = jnp.where(mask[None, :, :, None], logA, NEG)
+        A = jnp.exp(logA)
+        qk = jnp.einsum("bjhd,bthd->bjth", qb, kb)        # (B,j,τ,H)
+        intra = jnp.einsum("bjth,bthv->bjhv", qk * A, vb)  # (B,L,H,dv)
+
+        # ---- inter-chunk (carried state) term ------------------------------
+        # exp(m0 + F_j - m_j) = exp(m0 - M_j)
+        carry_w = jnp.exp(m0[:, None] - M)                 # (B,L,H)
+        inter = jnp.einsum("bhvd,bjhd->bjhv", S0, qb) * carry_w[..., None]
+        num = intra + inter                                # (B,L,H,dv)
+
+        if normalize:
+            nk = jnp.einsum("bjth,bthd->bjhd", A, kb)       # Σ_τ A k_τ
+            nvec = nk + n0[:, None] * carry_w[..., None]    # (B,L,H,dk)
+            dot = jnp.einsum("bjhd,bjhd->bjh", nvec, qb)
+            # true m at step j is F_j + M_j
+            denom = jnp.maximum(jnp.abs(dot), jnp.exp(-(F + M)))
+            y = num / denom[..., None]
+        else:
+            # undo the exp(-m_j) rescale; for SSD-style gates (log_i = 0,
+            # log_f <= 0) m_j == 0 identically, so this is exact and free.
+            y = num * jnp.exp(F + M)[..., None]
+
+        # ---- state update ---------------------------------------------------
+        sw = jnp.exp(w + FL[:, None] - m_new[:, None])      # (B,L,H)
+        S_new = (S0 * jnp.exp(m0 + FL - m_new)[..., None, None]
+                 + jnp.einsum("bthv,bthd,bth->bhvd", vb, kb, sw))
+        n_new = (n0 * jnp.exp(m0 + FL - m_new)[..., None]
+                 + jnp.einsum("bthd,bth->bhd", kb, sw))
+        return ScanState(S_new, n_new, m_new), y
+
+    # scan over chunks: move chunk axis first
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, lfc, lic))
+    final, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, dv)[:, :S]
+    return y.astype(v.dtype), final
+
+
+def step_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+              log_f: jax.Array, log_i: jax.Array,
+              state: ScanState, *, normalize: bool = False,
+              ) -> Tuple[jax.Array, ScanState]:
+    """Single decode step. q/k/v: (B, H, d·); log_f/log_i: (B, H)."""
+    S0, n0, m0 = state.S, state.n, state.m
+    lf = log_f.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    m_new = jnp.maximum(m0 + lf, li)
+    dec = jnp.exp(m0 + lf - m_new)
+    inp = jnp.exp(li - m_new)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    S_new = S0 * dec[..., None, None] + jnp.einsum(
+        "bhv,bhd,bh->bhvd", vf, kf, inp)
+    n_new = n0 * dec[..., None] + kf * inp[..., None]
+    num = jnp.einsum("bhvd,bhd->bhv", S_new, qf)
+    if normalize:
+        dot = jnp.einsum("bhd,bhd->bh", n_new, qf)
+        denom = jnp.maximum(jnp.abs(dot), jnp.exp(-m_new))
+        y = num / denom[..., None]
+    else:
+        y = num * jnp.exp(m_new)[..., None]
+    return y.astype(v.dtype), ScanState(S_new, n_new, m_new)
+
+
+def reference_scan(q, k, v, log_f, log_i, state=None, *, normalize=False):
+    """Per-step oracle (O(S) sequential) for tests. Same signature/semantics
+    as ``chunked_scan``."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = init_state(B, H, dk, dv)
+
+    def body(st, xs):
+        qt, kt, vt, lf, li = xs
+        y, st2 = step_scan(qt, kt, vt, lf, li, st, normalize=normalize)
+        return st2, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v, log_f, log_i))
+    final, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), final

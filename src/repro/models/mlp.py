@@ -1,0 +1,239 @@
+"""Dense FFN (SwiGLU / GeLU) and Mixture-of-Experts with expert parallelism.
+
+MoE design (TPU-native, see DESIGN.md §3):
+  * experts are sharded over the ``model`` mesh axis (EP); the expert count
+    is padded to a multiple of the EP degree and the router masks padding.
+  * token routing is capacity-based (GShard-style drops) but dispatched by
+    *scatter into fixed-capacity buffers* + ``lax.all_to_all``, not the
+    O(T·E·C) one-hot einsum — that einsum is infeasible at 1M-token batches.
+  * a second-level per-expert dispatch turns the received tokens into an
+    (E_local, C2, D) batched-GEMM operand, so expert FLOPs are exact
+    (no masked redundant compute).
+  * single-device path (tests / no mesh) is the same code with EP=1 and the
+    all_to_all skipped.
+
+Everything is differentiable (scatters/gathers/all_to_all have transposes),
+so the same layer serves train and serve.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, MoEConfig
+from repro.dist.sharding import constrain, current_mesh
+from repro.models.params import Builder, apply_linear, get_capture
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def init_mlp(b: Builder, cfg: ModelConfig, d_ff: int,
+             stack: Tuple[int, ...] = ()) -> None:
+    out_scale = 0.02 / max(1, cfg.n_layers) ** 0.5
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        b.linear("w_gate", cfg.d_model, d_ff, ("fsdp", "mlp"), stack)
+        b.linear("w_up", cfg.d_model, d_ff, ("fsdp", "mlp"), stack)
+        b.linear("w_down", d_ff, cfg.d_model, ("mlp", "fsdp"), stack,
+                 scale=out_scale)
+    else:  # gelu
+        b.linear("w_up", cfg.d_model, d_ff, ("fsdp", "mlp"), stack)
+        b.linear("w_down", d_ff, cfg.d_model, ("mlp", "fsdp"), stack,
+                 scale=out_scale)
+
+
+def apply_mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        act = jax.nn.gelu if cfg.mlp_kind == "geglu" else jax.nn.silu
+        h = act(apply_linear(p["w_gate"], x)) * apply_linear(p["w_up"], x)
+    else:
+        h = jax.nn.gelu(apply_linear(p["w_up"], x))
+    h = constrain(h, "batch", None, "mlp")
+    return apply_linear(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def init_moe(b: Builder, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> None:
+    m = cfg.moe
+    E = m.padded_experts
+    sub = b.sub("moe")
+    sub.linear("router", cfg.d_model, E, ("fsdp", None), stack)
+    st_axes = (None,) * len(stack)
+    # expert weights: (E, d, f) stacked — E shards over model (EP)
+    sub.normal("w_gate", (*stack, E, cfg.d_model, m.d_expert),
+               (*st_axes, "experts", "fsdp", None))
+    sub.normal("w_up", (*stack, E, cfg.d_model, m.d_expert),
+               (*st_axes, "experts", "fsdp", None))
+    sub.normal("w_down", (*stack, E, m.d_expert, cfg.d_model),
+               (*st_axes, "experts", None, "fsdp"),
+               scale=0.02 / max(1, cfg.n_layers) ** 0.5)
+    if m.num_shared:
+        shared = b.sub("moe_shared")
+        d_sh = m.d_shared * m.num_shared
+        shared.linear("w_gate", cfg.d_model, d_sh, ("fsdp", "mlp"), stack)
+        shared.linear("w_up", cfg.d_model, d_sh, ("fsdp", "mlp"), stack)
+        shared.linear("w_down", d_sh, cfg.d_model, ("mlp", "fsdp"), stack)
+        shared.linear("shared_gate", cfg.d_model, 1, ("fsdp", None), stack)
+
+
+def _dispatch_to_buffers(x: jax.Array, dest: jax.Array, n_dest: int,
+                         capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter rows of x (N, D) into (n_dest, capacity, D) buffers.
+
+    dest: (N,) int destination id per row (>= n_dest means 'drop').
+    Returns (buffers, slot_of_row (N,), kept_mask (N,)). Rows beyond a
+    destination's capacity are dropped (GShard capacity semantics).
+    """
+    N, D = x.shape
+    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)      # (N, n_dest)
+    pos_in_dest = (jnp.cumsum(onehot, axis=0) - onehot)          # rank within dest
+    slot = jnp.sum(pos_in_dest * onehot, axis=1)                 # (N,)
+    kept = (slot < capacity) & (dest < n_dest)
+    flat_idx = jnp.where(kept, dest * capacity + slot, n_dest * capacity)
+    buf = jnp.zeros((n_dest * capacity + 1, D), dtype=x.dtype)
+    buf = buf.at[flat_idx].set(jnp.where(kept[:, None], x, 0))
+    return buf[:-1].reshape(n_dest, capacity, D), slot, kept
+
+
+def _undispatch(buffers: jax.Array, dest: jax.Array, slot: jax.Array,
+                kept: jax.Array) -> jax.Array:
+    """Gather rows back: inverse of _dispatch_to_buffers."""
+    n_dest, capacity, D = buffers.shape
+    flat = buffers.reshape(n_dest * capacity, D)
+    idx = jnp.clip(dest * capacity + slot, 0, n_dest * capacity - 1)
+    rows = flat[idx]
+    return jnp.where(kept[:, None], rows, 0)
+
+
+def _expert_mm(w, xs: jax.Array) -> jax.Array:
+    """Per-expert batched matmul. w: (E, D, F) dense array OR factorized
+    {"B": (E, D, R), "C": (E, R, F)} (D-Rank deploy form, rank-padded)."""
+    if isinstance(w, dict):
+        t = jnp.einsum("ecd,edr->ecr", xs, w["B"].astype(xs.dtype))
+        return jnp.einsum("ecr,erf->ecf", t, w["C"].astype(xs.dtype))
+    return jnp.einsum("ecd,edf->ecf", xs, w.astype(xs.dtype))
+
+
+def _expert_ffn(w_gate, w_up, w_down, xs: jax.Array,
+                tag: Optional[str] = None) -> jax.Array:
+    """xs: (E_local, C2, D); weights (E_local, D, F)/(E_local, F, D)."""
+    cap = get_capture()
+    if cap is not None and tag:
+        cap.add_expert_batch(tag + "/in", xs)
+    h = jax.nn.silu(_expert_mm(w_gate, xs)) * _expert_mm(w_up, xs)
+    if cap is not None and tag:
+        cap.add_expert_batch(tag + "/mid", h)
+    return _expert_mm(w_down, h)
+
+
+def _moe_local(p: Dict, m: MoEConfig, x: jax.Array, ep: int,
+               axis_name: Optional[str],
+               tag: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard MoE body. x: (T, D) local tokens; experts sharded over
+    `axis_name` into `ep` shards (E_local each). Returns (out, aux_loss)."""
+    T, D = x.shape
+    E = m.padded_experts
+    e_local = E // ep
+    k = m.top_k
+
+    logits = x @ p["router"].astype(x.dtype)                  # (T, E)
+    if m.num_experts < E:                                     # mask padding
+        pad = jnp.arange(E) >= m.num_experts
+        logits = jnp.where(pad[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # load-balancing aux loss (Switch-style) over real experts
+    me = jnp.mean(probs[:, :m.num_experts], axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(expert_ids, E).sum(1))[:, :m.num_experts], axis=0)
+    aux = m.num_experts * jnp.sum(me * ce)
+
+    # ---- first-level dispatch: shard-to-shard all_to_all -----------------
+    xs = jnp.repeat(x, k, axis=0)                             # (T*k, D)
+    eids = expert_ids.reshape(-1)                             # (T*k,)
+    gates = gate_vals.reshape(-1).astype(x.dtype)
+    cap1 = int(math.ceil(T * k / ep * m.capacity_factor))
+    cap1 = max(8, -(-cap1 // 8) * 8)
+    dest_shard = eids // e_local
+    send, slot1, kept1 = _dispatch_to_buffers(xs, dest_shard, ep, cap1)
+    send_meta = jnp.stack([                                    # ride along
+        (eids % e_local).astype(x.dtype), jnp.zeros_like(gates)], axis=-1)
+    meta_buf, _, _ = _dispatch_to_buffers(send_meta, dest_shard, ep, cap1)
+    if axis_name is not None and ep > 1:
+        recv = jax.lax.all_to_all(send, axis_name, 0, 0, tiled=False)
+        meta = jax.lax.all_to_all(meta_buf, axis_name, 0, 0, tiled=False)
+    else:
+        recv, meta = send, meta_buf
+    recv = recv.reshape(ep * cap1, D)
+    local_eid = meta.reshape(ep * cap1, 2)[:, 0].astype(jnp.int32)
+
+    # ---- second-level dispatch: per-local-expert batched GEMM ------------
+    cap2 = int(math.ceil(ep * cap1 / e_local * m.capacity_factor))
+    cap2 = max(8, -(-cap2 // 8) * 8)
+    ebuf, slot2, kept2 = _dispatch_to_buffers(recv, local_eid, e_local, cap2)
+    eout = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], ebuf, tag=tag)
+    back = _undispatch(eout, local_eid, slot2, kept2)          # (ep*cap1, D)
+
+    # ---- return trip ------------------------------------------------------
+    back = back.reshape(ep, cap1, D)
+    if axis_name is not None and ep > 1:
+        back = jax.lax.all_to_all(back, axis_name, 0, 0, tiled=False)
+    rows = _undispatch(back, dest_shard, slot1, kept1)         # (T*k, D)
+    out = jnp.sum((rows * gates[:, None]).reshape(T, k, D), axis=1)
+    return out, aux
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    mesh = current_mesh()
+    moe_p = p["moe"]
+    tag = moe_p.get("_tag")
+    ew_tree = {k: moe_p[k] for k in ("w_gate", "w_up", "w_down")}
+    router_w = moe_p["router"]["w"]
+    if mesh is not None and "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        ep = mesh.shape["model"]
+        assert m.padded_experts % ep == 0, (m.padded_experts, ep)
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        in_spec = P(dp_axes if dp_axes else None, None, None)
+        # expert weights: leading E axis shards over `model` (EP); works for
+        # dense (E, d, f) and factorized {"B": (E, d, r), "C": (E, r, f)}
+        ew_specs = jax.tree.map(
+            lambda a: P("model", *([None] * (a.ndim - 1))), ew_tree)
+        rt = P(*([None] * router_w.ndim))
+
+        def body(rw, ew, xx):
+            pp = {"router": rw, **ew}
+            flat = xx.reshape(-1, D)
+            out, aux = _moe_local(pp, m, flat, ep, "model")
+            # tokens are replicated over 'model'; average the aux statistic
+            return out.reshape(xx.shape), aux
+
+        out, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(rt, ew_specs, in_spec),
+            out_specs=(in_spec, P()),
+            check_vma=False,
+        )(router_w, ew_tree, x)
+    else:
+        pp = {"router": router_w, **ew_tree}
+        out, aux = _moe_local(pp, m, x.reshape(-1, D), 1, None, tag=tag)
+        out = out.reshape(B, S, D)
+
+    if m.num_shared:
+        sh = p["moe_shared"]
+        g = jax.nn.silu(apply_linear(sh["w_gate"], x)) * apply_linear(sh["w_up"], x)
+        shared_out = apply_linear(sh["w_down"], g)
+        sgate = jax.nn.sigmoid(apply_linear(sh["shared_gate"], x))
+        out = out + sgate * shared_out
+    return out, aux

@@ -1,0 +1,163 @@
+"""Parameter construction + the dense/factorized linear runtime.
+
+Params are plain nested dicts of jnp arrays; alongside every params tree we
+build a parallel *spec tree* whose leaves are tuples of logical axis names
+(see ``repro.dist.sharding``). A linear is either
+
+  dense       {"w": (d_in, d_out) [, "b": (d_out,)]}
+  factorized  {"B": (d_in, r), "C": (r, d_out) [, "b": ...]}   # D-Rank deploy form
+
+optionally with a leading stack dim (n_layers_in_run, ...) for scanned
+layer stacks. ``apply_linear`` dispatches on the keys, so a compressed
+checkpoint drops into the same model code.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, object]
+Specs = Dict[str, object]
+
+# Global switch flipped by the launcher on TPU: route factorized matmuls
+# through the fused Pallas kernel instead of two jnp matmuls.
+_KERNEL_STATE = threading.local()
+
+
+def set_use_pallas(flag: bool) -> None:
+    _KERNEL_STATE.use = flag
+
+
+def use_pallas() -> bool:
+    return getattr(_KERNEL_STATE, "use", False)
+
+
+# Calibration capture: when enabled (eager mode only), every apply_linear on
+# a param dict carrying a "_tag" key reports its input activations to the
+# active collector (repro.core.capture.Collector).
+_CAPTURE = threading.local()
+
+
+def set_capture(collector) -> None:
+    _CAPTURE.collector = collector
+
+
+def get_capture():
+    return getattr(_CAPTURE, "collector", None)
+
+
+class Builder:
+    """Collects (params, specs) pairs; deterministic key splitting."""
+
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32):
+        self._key = key
+        self._n = 0
+        self.param_dtype = param_dtype
+        self.params: Params = {}
+        self.specs: Specs = {}
+
+    def _next_key(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+    def sub(self, name: str) -> "Builder":
+        b = Builder.__new__(Builder)
+        b._key = jax.random.fold_in(self._key, hash(name) % (2 ** 31))
+        b._n = 0
+        b.param_dtype = self.param_dtype
+        b.params = self.params.setdefault(name, {})
+        b.specs = self.specs.setdefault(name, {})
+        return b
+
+    def normal(self, name: str, shape: Sequence[int],
+               axes: Sequence[Optional[str]], scale: float = 0.02):
+        assert len(shape) == len(axes), (name, shape, axes)
+        arr = scale * jax.random.normal(self._next_key(), tuple(shape),
+                                        dtype=jnp.float32)
+        self.params[name] = arr.astype(self.param_dtype)
+        self.specs[name] = tuple(axes)
+
+    def zeros(self, name, shape, axes):
+        self.params[name] = jnp.zeros(tuple(shape), dtype=self.param_dtype)
+        self.specs[name] = tuple(axes)
+
+    def ones(self, name, shape, axes):
+        self.params[name] = jnp.ones(tuple(shape), dtype=self.param_dtype)
+        self.specs[name] = tuple(axes)
+
+    def const(self, name, value, axes):
+        self.params[name] = jnp.asarray(value, dtype=self.param_dtype)
+        self.specs[name] = tuple(axes)
+
+    # -- composite helpers --------------------------------------------------
+    def linear(self, name: str, d_in: int, d_out: int,
+               axes: Tuple[Optional[str], Optional[str]],
+               stack: Tuple[int, ...] = (), bias: bool = False,
+               scale: Optional[float] = None):
+        """Dense linear (the compressor may later replace it by B/C)."""
+        sub = self.sub(name)
+        s = 0.02 if scale is None else scale
+        stack_axes = (None,) * len(stack)
+        sub.normal("w", (*stack, d_in, d_out), (*stack_axes, *axes), scale=s)
+        if bias:
+            sub.zeros("b", (*stack, d_out), (*stack_axes, axes[1]))
+
+    def rmsnorm(self, name: str, dim: int, stack: Tuple[int, ...] = ()):
+        self.sub(name).ones("scale", (*stack, dim),
+                            ((None,) * len(stack)) + (None,))
+
+
+# ---------------------------------------------------------------------------
+# Apply fns
+# ---------------------------------------------------------------------------
+def apply_linear(p: Params, x: jax.Array, dtype=None) -> jax.Array:
+    """x: (..., d_in) -> (..., d_out); dense or factorized."""
+    dtype = dtype or x.dtype
+    cap = get_capture()
+    if cap is not None and "_tag" in p:
+        cap.add(p["_tag"], x)
+    if "B" in p:
+        b = p["B"].astype(dtype)
+        c = p["C"].astype(dtype)
+        if use_pallas():
+            from repro.kernels import ops as kops
+            y = kops.lowrank_matmul(x, b, c)
+        else:
+            y = (x @ b) @ c
+    else:
+        y = x @ p["w"].astype(dtype)
+    if "lora_A" in p:        # LoRA adapter: y += scale * x A B
+        y = y + p["lora_scale"].astype(dtype) * (
+            (x @ p["lora_A"].astype(dtype)) @ p["lora_B"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def linear_out_dim(p: Params) -> int:
+    return (p["C"] if "B" in p else p["w"]).shape[-1]
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def head_rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: normalize over the trailing head_dim."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,71 @@
+"""Rotary embeddings: standard RoPE, Qwen2-VL M-RoPE, and sinusoidal
+absolute positions (seamless enc-dec)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions: (..., S) int -> angles (..., S, head_dim//2)."""
+    freqs = _rope_freqs(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — (t, h, w) component ids (text tokens use t=h=w).
+    sections: per-component count of rotary freq pairs, sum == head_dim//2.
+    Returns angles (B, S, head_dim//2) with the frequency axis partitioned
+    into t/h/w sections.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = _rope_freqs(head_dim, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (3, B, S, hd/2)
+    comp = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                      total_repeat_length=head_dim // 2)      # (hd/2,)
+    sel = jax.nn.one_hot(comp, 3, dtype=ang.dtype)           # (hd/2, 3)
+    return jnp.einsum("cbsf,fc->bsf", ang, sel)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); angles: (B, S, hd//2). Rotates interleaved halves
+    (GPT-NeoX convention: first half / second half)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]   # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(dtype)
+
+
+def sinusoidal_embed(positions: jax.Array, dim: int,
+                     max_wavelength: float = 10_000.0) -> jax.Array:
+    """positions (..., S) -> (..., S, dim) sinusoidal absolute embedding."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(max_wavelength)
+                   * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def make_positions(batch: int, seq: int,
+                   kind: str, offset: jax.Array | int = 0) -> jax.Array:
+    """Default position ids. kind=='mrope' -> (3, B, S); else (B, S)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if kind == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos

@@ -1,0 +1,217 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, sequential with block-diagonal recurrence).
+
+mLSTM block (xLSTM arXiv:2405.04517, pre-up-projection variant):
+    x -> RMSNorm -> up-proj to (e*d) twice: branch u, gate z
+      u -> causal conv (k=4, silu) -> q, k projections; v from u directly
+      per-head scalar gates i (exp) / f (sigmoid) from the conv'd branch
+      mLSTM cell (chunked_scan, normalize=True) -> per-head RMS norm
+      -> * silu(z) -> down proj -> residual
+sLSTM block:
+    x -> RMSNorm -> sLSTM cell (4 gates, block-diagonal recurrence,
+    stabilized exponential i/f gating) -> per-head RMS norm -> GeGLU FFN
+    (proj factor 4/3) -> residual
+
+Decode paths keep O(1) state per layer: mLSTM (S, n, m) per head; sLSTM
+(c, n, h, m).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import linear_scan as lscan
+from repro.models.params import Builder, apply_linear, head_rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _inner(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = d_inner // cfg.n_heads
+    return d_inner, hd
+
+
+def init_mlstm(b: Builder, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> None:
+    d, H = cfg.d_model, cfg.n_heads
+    di, hd = _inner(cfg)
+    st = (None,) * len(stack)
+    b.linear("w_up", d, di, ("fsdp", "ssm_inner"), stack)
+    b.linear("w_gate", d, di, ("fsdp", "ssm_inner"), stack)
+    b.normal("conv", (*stack, 4, di), (*st, None, "ssm_inner"), scale=0.1)
+    b.linear("wq", di, di, ("ssm_inner", None), stack)
+    b.linear("wk", di, di, ("ssm_inner", None), stack)
+    # per-head scalar gates from the conv'd branch
+    b.linear("w_if", di, 2 * H, ("ssm_inner", None), stack)
+    bif = jnp.concatenate([jnp.zeros(H), 3.0 * jnp.ones(H)])
+    b.sub("gate_bias").const("b_if", jnp.broadcast_to(bif, (*stack, 2 * H)),
+                             st + (None,))
+    b.ones("head_norm", (*stack, hd), st + (None,))
+    b.linear("w_down", di, d, ("ssm_inner", "fsdp"), stack,
+             scale=0.02 / max(1, cfg.n_layers) ** 0.5)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 prev: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq. u: (B,S,D); w: (K,D).
+    prev: (B,K-1,D) history for decode; returns (out, new history)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], K - 1, u.shape[-1]), dtype=u.dtype)
+    full = jnp.concatenate([prev, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+              for i in range(K))
+    return out, full[:, -(K - 1):]
+
+
+def _mlstm_qkvif(p: Dict, cfg: ModelConfig, x: jax.Array, conv_hist=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di, hd = _inner(cfg)
+    u = apply_linear(p["w_up"], x)
+    z = apply_linear(p["w_gate"], x)
+    c, hist = _causal_conv(u, p["conv"], conv_hist)
+    c = jax.nn.silu(c)
+    q = apply_linear(p["wq"], c).reshape(B, S, H, hd)
+    k = apply_linear(p["wk"], c).reshape(B, S, H, hd) * (hd ** -0.5)
+    v = u.reshape(B, S, H, hd)
+    gif = (apply_linear(p["w_if"], c)
+           + p["gate_bias"]["b_if"].astype(c.dtype)).astype(jnp.float32)
+    li = gif[..., :H]                       # raw input gate (exp)
+    lf = jax.nn.log_sigmoid(gif[..., H:])   # sigmoid forget gate, log space
+    return q, k, v, li, lf, z, hist
+
+
+def apply_mlstm(p: Dict, cfg: ModelConfig, x: jax.Array,
+                *, chunk: int = 128, return_cache: bool = False):
+    B, S, _ = x.shape
+    di, hd = _inner(cfg)
+    q, k, v, li, lf, z, hist = _mlstm_qkvif(p, cfg, x)
+    y, st = lscan.chunked_scan(q, k, v, lf, li, chunk=chunk, normalize=True)
+    y = head_rms_norm(p["head_norm"], y, cfg.norm_eps)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "ssm_inner")
+    out = apply_linear(p["w_down"], y)
+    if return_cache:
+        return out, {"state": st, "conv": hist}
+    return out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, hd = _inner(cfg)
+    return {
+        "state": lscan.init_state(batch, cfg.n_heads, hd, hd),
+        "conv": jnp.zeros((batch, 3, di), dtype=dtype),
+    }
+
+
+def decode_mlstm(p: Dict, cfg: ModelConfig, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,D) single step."""
+    B = x.shape[0]
+    di, hd = _inner(cfg)
+    q, k, v, li, lf, z, hist = _mlstm_qkvif(p, cfg, x, cache["conv"])
+    y, st = lscan.step_scan(q[:, 0], k[:, 0], v[:, 0], lf[:, 0], li[:, 0],
+                            cache["state"], normalize=True)
+    y = head_rms_norm(p["head_norm"], y, cfg.norm_eps)
+    y = y.reshape(B, 1, di) * jax.nn.silu(z)
+    return apply_linear(p["w_down"], y), {"state": st, "conv": hist}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(b: Builder, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> None:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    st = (None,) * len(stack)
+    b.linear("w_in", d, 4 * d, ("fsdp", "ssm_inner"), stack)   # z,i,f,o pre-acts
+    # block-diagonal recurrence: (H, hd, hd) per gate
+    for g in ("rz", "ri", "rf", "ro"):
+        b.normal(g, (*stack, H, hd, hd), (*st, None, None, None),
+                 scale=1.0 / hd ** 0.5)
+    bias = jnp.concatenate([jnp.zeros(2 * d), 3.0 * jnp.ones(d),
+                            jnp.zeros(d)])
+    b.sub("bias").const("b", jnp.broadcast_to(bias, (*stack, 4 * d)),
+                        st + (None,))
+    b.ones("head_norm", (*stack, hd), st + (None,))
+    dff = int(4 * d // 3)
+    b.linear("ff_gate", d, dff, ("fsdp", "mlp"), stack)
+    b.linear("ff_up", d, dff, ("fsdp", "mlp"), stack)
+    b.linear("ff_down", dff, d, ("mlp", "fsdp"), stack,
+             scale=0.02 / max(1, cfg.n_layers) ** 0.5)
+
+
+def _slstm_cell(p: Dict, cfg: ModelConfig, pre: jax.Array,
+                state: Dict) -> Tuple[jax.Array, Dict]:
+    """One step. pre: (B, 4d) input pre-activations (before recurrence).
+    state: c,n,h (B,H,hd), m (B,H)."""
+    B = pre.shape[0]
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    h = state["h"]                                        # (B,H,hd)
+    rec = [jnp.einsum("bhd,hde->bhe", h, p[g].astype(h.dtype))
+           for g in ("rz", "ri", "rf", "ro")]
+    parts = pre.reshape(B, 4, H, hd)
+    zt = jnp.tanh(parts[:, 0] + rec[0])
+    it = (parts[:, 1] + rec[1]).astype(jnp.float32)       # log input gate
+    ft = (parts[:, 2] + rec[2]).astype(jnp.float32)       # log forget gate
+    ot = jax.nn.sigmoid(parts[:, 3] + rec[3])
+    # stabilized exponential gating, per scalar memory cell
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(ft + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * zt.astype(jnp.float32)
+    n = f_g * state["n"] + i_g
+    h_new = (ot * (c / jnp.maximum(n, 1e-6)).astype(ot.dtype))
+    return h_new, {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), dtype=jnp.float32)
+    return {"c": z, "n": z, "h": z.astype(dtype), "m": z}
+
+
+def _slstm_ffn(p: Dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.gelu(apply_linear(p["ff_gate"], x))
+    h = g * apply_linear(p["ff_up"], x)
+    h = constrain(h, "batch", None, "mlp")
+    return apply_linear(p["ff_down"], h)
+
+
+def apply_slstm(p: Dict, cfg: ModelConfig, x: jax.Array,
+                *, return_cache: bool = False):
+    """Full-sequence sLSTM (sequential lax.scan over time)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    pre = apply_linear(p["w_in"], x) + p["bias"]["b"].astype(x.dtype)
+
+    def step(state, pre_t):
+        h, st = _slstm_cell(p, cfg, pre_t, state)
+        return st, h
+
+    st0 = init_slstm_cache(cfg, B, x.dtype)
+    final, hs = jax.lax.scan(step, st0, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                             # (B,S,H,hd)
+    y = head_rms_norm(p["head_norm"], y, cfg.norm_eps).reshape(B, S, d)
+    out = _slstm_ffn(p, y)
+    if return_cache:
+        return out, final
+    return out
+
+
+def decode_slstm(p: Dict, cfg: ModelConfig, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    B, _, d = x.shape
+    pre = apply_linear(p["w_in"], x[:, 0]) + p["bias"]["b"].astype(x.dtype)
+    h, st = _slstm_cell(p, cfg, pre, cache)
+    y = head_rms_norm(p["head_norm"], h, cfg.norm_eps).reshape(B, 1, d)
+    return _slstm_ffn(p, y), st

@@ -1,0 +1,545 @@
+"""Model assembly: embeddings, kind-run layer stacks (lax.scan), final norm,
+LM head; full-sequence forward (train / prefill), cached decode step, and
+encoder–decoder wiring.
+
+A model is a sequence of layer *runs* — consecutive layers of the same kind
+(see ``ModelConfig.layer_kinds``). Each run's parameters are stacked along a
+leading axis and executed with ``lax.scan`` (small HLO, fast compile, remat
+per block). A run's parameter tree may instead be a *list* of per-layer
+trees — that is the deploy form of a D-Rank-compressed model whose per-layer
+ranks differ — in which case the run executes as an unrolled Python loop.
+
+Batch dictionary convention (everything optional except one input):
+  tokens      (B, S) int32       — token ids (decoder side for enc-dec)
+  embeds      (B, S, D) float    — precomputed frontend embeddings (vlm/audio
+                                   stub); replaces token embedding
+  positions   (B, S) or (3, B, S) int32 — rope / m-rope position ids
+  enc_embeds  (B, T, D) float    — encoder input (audio stub)
+  labels      (B, S) int32       — next-token targets (loss)
+  loss_mask   (B, S) float       — optional per-token weights
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import mamba, rotary, ssm
+from repro.models.attention import (attend_decode, attend_full,
+                                    attend_prefill, init_attention,
+                                    init_kv_cache)
+from repro.models.mlp import apply_mlp, apply_moe, init_mlp, init_moe
+from repro.models.params import (Builder, Params, apply_linear, rms_norm,
+                                 softcap)
+
+Aux = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(b: Builder, cfg: ModelConfig, kind: str, n: int,
+                cross: bool = False) -> None:
+    """One run of `n` layers of `kind` (stacked along leading dim)."""
+    stack = (n,)
+    b.rmsnorm("ln1", cfg.d_model, stack)
+    if kind in ("attn", "swa", "hymba", "hymba_g"):
+        init_attention(b.sub("attn"), cfg, stack)
+    if kind in ("hymba", "hymba_g"):
+        mamba.init_ssm(b.sub("ssm"), cfg, stack)
+        mamba.init_hymba_combine(b, cfg, stack)
+    if kind == "mlstm":
+        ssm.init_mlstm(b.sub("mlstm"), cfg, stack)
+    if kind == "slstm":
+        ssm.init_slstm(b.sub("slstm"), cfg, stack)
+    if cross:
+        b.rmsnorm("ln_cross", cfg.d_model, stack)
+        init_attention(b.sub("cross"), cfg, stack, cross=True)
+    # FFN (attention-ish kinds only; ssm kinds carry their own projections)
+    if kind in ("attn", "swa", "hymba", "hymba_g"):
+        b.rmsnorm("ln2", cfg.d_model, stack)
+        if cfg.moe.num_experts:
+            init_moe(b, cfg, stack)
+        elif cfg.d_ff:
+            init_mlp(b.sub("mlp"), cfg, cfg.d_ff, stack)
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Params]:
+    """Returns (params, specs) — parallel pytrees."""
+    import numpy as _np
+    b = Builder(key, param_dtype=jnp.dtype(cfg.param_dtype))
+    b.normal("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+             scale=1.0 / cfg.d_model ** 0.5)
+    dec = b.sub("decoder")
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        _init_block(dec.sub(f"run{r}"), cfg, kind, n,
+                    cross=cfg.is_encoder_decoder)
+    b.rmsnorm("final_norm", cfg.d_model)
+    if not cfg.tie_embeddings:
+        b.linear("lm_head", cfg.d_model, cfg.vocab_size, ("embed", "vocab"))
+    if cfg.is_encoder_decoder:
+        enc = b.sub("encoder")
+        enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers,
+                              sliding_window=0, local_global_pattern=(0, 0))
+        for r, (kind, n) in enumerate(enc_cfg.layer_runs()):
+            _init_block(enc.sub(f"run{r}"), enc_cfg, kind, n)
+        enc.rmsnorm("enc_norm", cfg.d_model)
+    return b.params, b.specs
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))
+
+
+# ---------------------------------------------------------------------------
+# Rope angles per kind
+# ---------------------------------------------------------------------------
+def _angles_for(cfg: ModelConfig, kind: str,
+                positions: Optional[jax.Array]) -> Optional[jax.Array]:
+    if cfg.rope_kind == "none" or positions is None:
+        return None
+    local = kind in ("swa", "hymba") and cfg.rope_theta_local > 0
+    theta = cfg.rope_theta_local if local else cfg.rope_theta
+    if cfg.rope_kind == "mrope":
+        return rotary.mrope_angles(positions, cfg.head_dim, theta,
+                                   cfg.mrope_sections)
+    return rotary.rope_angles(positions, cfg.head_dim, theta)
+
+
+def _kind_window(cfg: ModelConfig, kind: str) -> int:
+    if kind in ("swa", "hymba"):
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application (train / eval)
+# ---------------------------------------------------------------------------
+def _block_fwd(kind: str, cfg: ModelConfig, p: Params, x: jax.Array,
+               angles: Optional[jax.Array], enc_out: Optional[jax.Array],
+               causal: bool) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux)."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    win = _kind_window(cfg, kind)
+    if kind in ("attn", "swa"):
+        x = x + attend_full(p["attn"], cfg, h, angles, causal=causal,
+                            window=win)
+    elif kind in ("hymba", "hymba_g"):
+        a = attend_full(p["attn"], cfg, h, angles, causal=causal, window=win)
+        s = mamba.apply_ssm(p["ssm"], cfg, h)
+        x = x + mamba.hymba_combine(p, cfg, a, s)
+    elif kind == "mlstm":
+        x = x + ssm.apply_mlstm(p["mlstm"], cfg, h)
+    elif kind == "slstm":
+        x = x + ssm.apply_slstm(p["slstm"], cfg, h)
+    if "ln_cross" in p and enc_out is not None:
+        h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attend_full(p["cross"], cfg, h, None, kv=(enc_out, enc_out))
+    if "ln2" in p:
+        h = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out, aux = apply_moe(p, cfg, h)
+            x = x + out
+        elif "mlp" in p:
+            x = x + apply_mlp(p["mlp"], cfg, h)
+    return x, aux
+
+
+def _run_layers(run_p: Any, cfg: ModelConfig, x: jax.Array, body) -> \
+        Tuple[jax.Array, jax.Array]:
+    """Apply a run. `body(p_layer, x) -> (x, aux)`. Handles the three param
+    layouts: list (unrolled, compressed deploy), stacked+scan, stacked+index.
+    """
+    if isinstance(run_p, list):
+        aux = jnp.zeros((), dtype=jnp.float32)
+        for pl in run_p:
+            x, a = body(pl, x)
+            aux = aux + a
+        return x, aux
+    n = jax.tree.leaves(run_p)[0].shape[0]
+    if not cfg.scan_layers:
+        aux = jnp.zeros((), dtype=jnp.float32)
+        for i in range(n):
+            pl = jax.tree.map(lambda a: a[i], run_p)
+            x, a = body(pl, x)
+            aux = aux + a
+        return x, aux
+
+    def scan_body(carry, pl):
+        x, aux = carry
+        x, a = body(pl, x)
+        return (x, aux + a), None
+
+    wrapped = scan_body
+    if cfg.remat != "none":
+        # "block": save only layer boundaries, recompute the block in the
+        # backward pass; "dots": additionally keep matmul outputs (a §Perf
+        # memory/compute trade-off knob).
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        wrapped = jax.checkpoint(scan_body, policy=policy,
+                                 prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(wrapped, (x, jnp.zeros((), jnp.float32)),
+                               run_p)
+    return x, aux
+
+
+def _stack_forward(stack_p: Params, cfg: ModelConfig, x: jax.Array,
+                   kinds_runs, positions, enc_out, causal) -> \
+        Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), dtype=jnp.float32)
+    for r, (kind, n) in enumerate(kinds_runs):
+        angles = _angles_for(cfg, kind, positions)
+        body = functools.partial(_block_fwd, kind, cfg, angles=angles,
+                                 enc_out=enc_out, causal=causal)
+        bodyf = lambda pl, xx: body(pl, xx)
+        x, a = _run_layers(stack_p[f"run{r}"], cfg, x, bodyf)
+        x = constrain(x, "batch", "seq", None)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(params: Params, cfg: ModelConfig,
+                 tokens: jax.Array) -> jax.Array:
+    emb = params["embed"].astype(jnp.dtype(cfg.dtype))
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype=x.dtype)
+    return x
+
+
+def lm_logits(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = apply_linear(params["lm_head"], x)
+    logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _default_positions(cfg: ModelConfig, batch: Dict) -> Optional[jax.Array]:
+    if cfg.rope_kind == "none":
+        return None
+    if "positions" in batch:
+        return batch["positions"]
+    src = batch.get("tokens", batch.get("embeds"))
+    B, S = src.shape[0], src.shape[1]
+    return rotary.make_positions(B, S, cfg.rope_kind)
+
+
+def encode(params: Params, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    """Encoder stack (enc-dec models). Input: enc_embeds (audio stub) or
+    enc_tokens."""
+    if "enc_embeds" in batch:
+        x = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_tokens(params, cfg, batch["enc_tokens"])
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = x + rotary.sinusoidal_embed(pos, cfg.d_model).astype(x.dtype)
+    enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers, sliding_window=0,
+                          local_global_pattern=(0, 0))
+    x, _ = _stack_forward(params["encoder"], enc_cfg, x,
+                          enc_cfg.layer_runs(), None, None, causal=False)
+    return rms_norm(params["encoder"]["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval, full sequence)
+# ---------------------------------------------------------------------------
+def forward(params: Params, cfg: ModelConfig,
+            batch: Dict) -> Tuple[jax.Array, Aux]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+    if cfg.is_encoder_decoder:
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = x + rotary.sinusoidal_embed(pos, cfg.d_model).astype(x.dtype)
+    x = constrain(x, "batch", "seq", None)
+    positions = _default_positions(cfg, batch)
+    x, moe_aux = _stack_forward(params["decoder"], cfg, x, cfg.layer_runs(),
+                                positions, enc_out, causal=True)
+    logits = lm_logits(params, cfg, x)
+    return logits, {"moe_aux": moe_aux}
+
+
+def lm_loss(params: Params, cfg: ModelConfig,
+            batch: Dict) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE. If batch has explicit `labels`, logits align 1:1 with
+    them; otherwise labels are tokens shifted left by one."""
+    logits, aux = forward(params, cfg, batch)
+    if "labels" in batch:
+        labels = batch["labels"]
+    else:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                         constant_values=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+    labels_c = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    acc = (jnp.argmax(lf, -1) == labels_c).astype(jnp.float32) * mask
+    metrics = {
+        "loss": loss,
+        "ppl_log": loss,                      # exp() applied host-side
+        "accuracy": acc.sum() / denom,
+        "tokens": mask.sum(),
+    }
+    if cfg.moe.num_experts:
+        loss = loss + cfg.moe.aux_loss_weight * aux["moe_aux"] / max(
+            1, cfg.n_layers)
+        metrics["moe_aux"] = aux["moe_aux"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (single step with caches)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    """Cache pytree: per-run stacked caches + per-sequence positions."""
+    dtype = jnp.dtype(cfg.dtype)
+    runs: Dict[str, Any] = {}
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        win = _kind_window(cfg, kind)
+        entry: Dict[str, Any] = {}
+        if kind in ("attn", "swa", "hymba", "hymba_g"):
+            kv = [init_kv_cache(cfg, batch, max_len, win, dtype)
+                  for _ in range(n)]
+            entry["kv"] = jax.tree.map(lambda *a: jnp.stack(a), *kv)
+        if kind in ("hymba", "hymba_g"):
+            ss = [mamba.init_ssm_cache(cfg, batch, dtype) for _ in range(n)]
+            entry["ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *ss)
+        if kind == "mlstm":
+            ms = [ssm.init_mlstm_cache(cfg, batch, dtype) for _ in range(n)]
+            entry["mlstm"] = jax.tree.map(lambda *a: jnp.stack(a), *ms)
+        if kind == "slstm":
+            sl = [ssm.init_slstm_cache(cfg, batch, dtype) for _ in range(n)]
+            entry["slstm"] = jax.tree.map(lambda *a: jnp.stack(a), *sl)
+        if cfg.is_encoder_decoder:
+            entry["cross_kv"] = {
+                "k": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype=dtype),
+                "v": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype=dtype),
+            }
+        runs[f"run{r}"] = entry
+    return {"runs": runs, "pos": jnp.zeros((batch,), dtype=jnp.int32)}
+
+
+def _block_decode(kind: str, cfg: ModelConfig, p: Params, cache: Dict,
+                  x: jax.Array, pos: jax.Array,
+                  angles: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    win = _kind_window(cfg, kind)
+    if kind in ("attn", "swa"):
+        out, kv = attend_decode(p["attn"], cfg, h, pos, cache["kv"], angles,
+                                window=win)
+        x = x + out
+        new_cache["kv"] = kv
+    elif kind in ("hymba", "hymba_g"):
+        a, kv = attend_decode(p["attn"], cfg, h, pos, cache["kv"], angles,
+                              window=win)
+        s, sst = mamba.decode_ssm(p["ssm"], cfg, h, cache["ssm"])
+        x = x + mamba.hymba_combine(p, cfg, a, s)
+        new_cache["kv"], new_cache["ssm"] = kv, sst
+    elif kind == "mlstm":
+        out, mst = ssm.decode_mlstm(p["mlstm"], cfg, h, cache["mlstm"])
+        x = x + out
+        new_cache["mlstm"] = mst
+    elif kind == "slstm":
+        out, sst = ssm.decode_slstm(p["slstm"], cfg, h, cache["slstm"])
+        x = x + out
+        new_cache["slstm"] = sst
+    if "ln_cross" in p and "cross_kv" in cache:
+        h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        ckv = (cache["cross_kv"]["k"], cache["cross_kv"]["v"])
+        out, _ = attend_decode(p["cross"], cfg, h, pos, {}, None,
+                               cross_kv=ckv)
+        x = x + out
+        new_cache["cross_kv"] = cache["cross_kv"]
+    if "ln2" in p:
+        h = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out, _ = apply_moe(p, cfg, h)
+            x = x + out
+        elif "mlp" in p:
+            x = x + apply_mlp(p["mlp"], cfg, h)
+    return x, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
+                tokens_or_embeds: jax.Array,
+                positions: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Dict]:
+    """One new token per sequence. tokens (B,1) int or embeds (B,1,D).
+    Returns (logits (B,1,V), new cache)."""
+    pos = cache["pos"]
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = embed_tokens(params, cfg, tokens_or_embeds)
+    else:
+        x = tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        x = x + rotary.sinusoidal_embed(pos[:, None], cfg.d_model
+                                        ).astype(x.dtype)
+    new_runs: Dict[str, Any] = {}
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        if positions is not None:
+            rp = positions
+        elif cfg.rope_kind == "mrope":
+            rp = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+        else:
+            rp = pos[:, None]
+        angles = _angles_for(cfg, kind, rp)
+        run_p = params["decoder"][f"run{r}"]
+        run_c = cache["runs"][f"run{r}"]
+
+        if isinstance(run_p, list):
+            ncs = []
+            for i, pl in enumerate(run_p):
+                cl = jax.tree.map(lambda a: a[i], run_c)
+                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles)
+                ncs.append(nc)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+        elif not cfg.scan_layers:
+            ncs = []
+            for i in range(n):
+                pl = jax.tree.map(lambda a: a[i], run_p)
+                cl = jax.tree.map(lambda a: a[i], run_c)
+                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles)
+                ncs.append(nc)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+        else:
+            def body(xx, pc):
+                pl, cl = pc
+                xx, nc = _block_decode(kind, cfg, pl, cl, xx, pos, angles)
+                return xx, nc
+            x, nc = jax.lax.scan(body, x, (run_p, run_c))
+            new_runs[f"run{r}"] = nc
+    logits = lm_logits(params, cfg, x)
+    return logits, {"runs": new_runs, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence -> cache)
+# ---------------------------------------------------------------------------
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _block_prefill(kind: str, cfg: ModelConfig, p: Params, x: jax.Array,
+                   angles, max_len: int, enc_out) -> Tuple[jax.Array, Dict]:
+    cache: Dict[str, Any] = {}
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    win = _kind_window(cfg, kind)
+    if kind in ("attn", "swa"):
+        out, kv = attend_prefill(p["attn"], cfg, h, angles, causal=True,
+                                 window=win, max_len=max_len)
+        x = x + out
+        cache["kv"] = kv
+    elif kind in ("hymba", "hymba_g"):
+        a, kv = attend_prefill(p["attn"], cfg, h, angles, causal=True,
+                               window=win, max_len=max_len)
+        s, sst = mamba.apply_ssm(p["ssm"], cfg, h, return_cache=True)
+        x = x + mamba.hymba_combine(p, cfg, a, s)
+        cache["kv"], cache["ssm"] = kv, sst
+    elif kind == "mlstm":
+        out, mst = ssm.apply_mlstm(p["mlstm"], cfg, h, return_cache=True)
+        x = x + out
+        cache["mlstm"] = mst
+    elif kind == "slstm":
+        out, sst = ssm.apply_slstm(p["slstm"], cfg, h, return_cache=True)
+        x = x + out
+        cache["slstm"] = sst
+    if "ln_cross" in p and enc_out is not None:
+        hc = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attend_full(p["cross"], cfg, hc, None, kv=(enc_out, enc_out))
+        # materialize per-layer cross K/V once for the decode loop
+        cache["cross_kv"] = {
+            "k": _split_heads(apply_linear(p["cross"]["wk"], enc_out),
+                              cfg.n_kv_heads, cfg.head_dim),
+            "v": _split_heads(apply_linear(p["cross"]["wv"], enc_out),
+                              cfg.n_kv_heads, cfg.head_dim),
+        }
+    if "ln2" in p:
+        h = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out, _ = apply_moe(p, cfg, h)
+            x = x + out
+        elif "mlp" in p:
+            x = x + apply_mlp(p["mlp"], cfg, h)
+    return x, cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict,
+            max_len: int) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, build the decode cache. Returns
+    (logits of the last position (B, 1, V), cache)."""
+    enc_out = encode(params, cfg, batch) if cfg.is_encoder_decoder else None
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+    B, S, _ = x.shape
+    if cfg.is_encoder_decoder:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = x + rotary.sinusoidal_embed(pos, cfg.d_model).astype(x.dtype)
+    x = constrain(x, "batch", "seq", None)
+    positions = _default_positions(cfg, batch)
+
+    new_runs: Dict[str, Any] = {}
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        angles = _angles_for(cfg, kind, positions)
+        run_p = params["decoder"][f"run{r}"]
+
+        def body(pl, xx):
+            return _block_prefill(kind, cfg, pl, xx, angles, max_len, enc_out)
+
+        if isinstance(run_p, list):
+            caches = []
+            for pl in run_p:
+                x, c = body(pl, x)
+                caches.append(c)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                               *caches)
+        elif not cfg.scan_layers:
+            caches = []
+            for i in range(n):
+                pl = jax.tree.map(lambda a: a[i], run_p)
+                x, c = body(pl, x)
+                caches.append(c)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                               *caches)
+        else:
+            def scan_body(xx, pl):
+                return body(pl, xx)
+            x, nc = jax.lax.scan(scan_body, x, run_p)
+            new_runs[f"run{r}"] = nc
+        x = constrain(x, "batch", "seq", None)
+    logits = lm_logits(params, cfg, x[:, -1:])
+    cache = {"runs": new_runs,
+             "pos": jnp.full((B,), S, dtype=jnp.int32)}
+    return logits, cache

@@ -1,0 +1,103 @@
+"""AdamW (decoupled weight decay), schedules, global-norm clipping.
+
+Written as a minimal optax-style (init, update) pair over pytrees so the
+train step can chain transforms; state is a plain pytree (checkpointable,
+shardable with the same logical specs as the params)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Dict
+    nu: Dict
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "linear":
+            decay = 1.0 - (1.0 - cfg.min_lr_frac) * t
+        else:
+            decay = jnp.asarray(1.0)
+        return cfg.lr * warm * decay
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def _decay_mask(path_leaf: Tuple) -> bool:
+    """No weight decay on norms/biases/1-d params (standard practice)."""
+    return True
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state: AdamWState, params,
+                 ) -> Tuple[Dict, AdamWState, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, stats)."""
+    sched = make_schedule(cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = sched(state.step)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) \
+            if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + wd)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), stats

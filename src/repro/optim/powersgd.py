@@ -1,0 +1,157 @@
+"""PowerSGD-style low-rank gradient compression with error feedback —
+the cross-pod (DCI) distributed-optimization trick (DESIGN.md §5).
+
+Each >=2-D gradient leaf M (d1, d2) is factorized as M ≈ P Qᵀ with
+P (d1, r), Q (d2, r): workers all-reduce the factors (r·(d1+d2) bytes)
+instead of the dense gradient (d1·d2 bytes) — a (d1·d2)/(r(d1+d2))×
+reduction on the slow inter-pod links. The residual M − P Qᵀ is kept in
+local *error feedback* state and re-injected next step, which restores
+convergence (Vogels et al., 2019).
+
+Beyond-paper synergy: the per-leaf rank is allocated with the SAME
+effective-rank Lagrange machinery the paper uses for weights — gradients of
+information-dense layers get more rank under a fixed byte budget
+(``allocate_ranks_by_reff``).
+
+The reduction itself is expressed with ``jax.lax.psum`` inside a
+``shard_map`` over the data-parallel axes (``cross_pod_mean``); on a single
+device the psum is the identity and the same code path is exercised by
+tests via a vmapped multi-worker simulation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import allocate as alloc
+
+
+@dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 4
+    min_dim: int = 64          # leaves smaller than this stay dense
+    ef: bool = True            # error feedback
+    warm_start: bool = True    # reuse Q across steps
+
+
+class PowerSGDState(NamedTuple):
+    error: Dict                # error-feedback residuals (dense leaves)
+    q: Dict                    # warm-start Q factors
+
+
+def _compressible(x) -> bool:
+    return x.ndim >= 2 and min(x.shape[-2], x.shape[-1]) >= 2
+
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+def _orthonormalize(P: jax.Array) -> jax.Array:
+    """Gram-Schmidt via QR (fp32)."""
+    q, _ = jnp.linalg.qr(P.astype(jnp.float32))
+    return q
+
+
+def init_state(grads, cfg: PowerSGDConfig,
+               ranks: Optional[Dict[str, int]] = None,
+               key: Optional[jax.Array] = None) -> PowerSGDState:
+    key = key if key is not None else jax.random.PRNGKey(17)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    err, qs = {}, {}
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        if not _compressible(leaf) or min(
+                _as2d(leaf).shape) < cfg.min_dim:
+            continue
+        r = (ranks or {}).get(name, cfg.rank)
+        r = max(1, min(r, min(_as2d(leaf).shape)))
+        err[name] = jnp.zeros_like(leaf, dtype=jnp.float32)
+        qs[name] = jax.random.normal(jax.random.fold_in(key, i),
+                                     (_as2d(leaf).shape[1], r),
+                                     dtype=jnp.float32)
+    return PowerSGDState(error=err, q=qs)
+
+
+def compress_decompress(grads, state: PowerSGDState, cfg: PowerSGDConfig,
+                        reduce_fn=None
+                        ) -> Tuple[Dict, PowerSGDState, Dict[str, float]]:
+    """One round: per compressible leaf, factorize (grad + error), reduce the
+    factors with `reduce_fn` (e.g. a psum-mean over the pod axis; identity if
+    None), reconstruct, update error feedback. Dense leaves pass through
+    `reduce_fn` untouched (they'd ride the intra-pod reduction in deploy).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    out_leaves = []
+    new_err = dict(state.error)
+    new_q = dict(state.q)
+    dense_bytes = 0
+    comp_bytes = 0
+    rf = reduce_fn if reduce_fn is not None else (lambda x: x)
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if name not in state.q:
+            out_leaves.append(rf(leaf))
+            continue
+        M = _as2d(leaf.astype(jnp.float32))
+        if cfg.ef:
+            M = M + _as2d(state.error[name])
+        Q = state.q[name]
+        P = _orthonormalize(rf(M @ Q))           # (d1, r), reduced
+        Qn = rf(M.T @ P)                          # (d2, r), reduced
+        Mhat = P @ Qn.T
+        if cfg.ef:
+            new_err[name] = (M - Mhat).reshape(leaf.shape)
+        new_q[name] = Qn if cfg.warm_start else Q
+        out_leaves.append(Mhat.reshape(leaf.shape).astype(leaf.dtype))
+        dense_bytes += M.size * 4
+        comp_bytes += (P.size + Qn.size) * 4
+    out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    stats = {"dense_bytes": float(dense_bytes),
+             "compressed_bytes": float(comp_bytes),
+             "byte_reduction": float(dense_bytes / max(1, comp_bytes))}
+    return out, PowerSGDState(error=new_err, q=new_q), stats
+
+
+def cross_pod_mean(mesh, axis: str = "pod"):
+    """Returns a reduce_fn performing a mean-psum over `axis` for use inside
+    an enclosing shard_map; identity when the axis is absent."""
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return lambda x: x
+
+    def rf(x):
+        return jax.lax.pmean(x, axis)
+    return rf
+
+
+def allocate_ranks_by_reff(grads, byte_budget_frac: float,
+                           cfg: PowerSGDConfig) -> Dict[str, int]:
+    """Beyond-paper: spend a fixed factor-byte budget across leaves in
+    proportion to sqrt(R_eff(grad)/ω) — the paper's allocator applied to
+    gradient spectra."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    specs = []
+    names = []
+    for path, leaf in flat:
+        if not _compressible(leaf) or min(_as2d(leaf).shape) < cfg.min_dim:
+            continue
+        name = jax.tree_util.keystr(path)
+        M = np.asarray(_as2d(leaf), dtype=np.float64)
+        sig = np.linalg.svd(M, compute_uv=False)
+        from repro.core.numerics import effective_rank
+        reff = effective_rank(sig)
+        d1, d2 = M.shape
+        specs.append(alloc.GroupSpec(
+            gid=name, mtype="grad", reff=reff, omega=d1 + d2,
+            kmax=min(d1, d2), kmin=1, dense_params=d1 * d2))
+        names.append(name)
+    if not specs:
+        return {}
+    budget = byte_budget_frac * sum(s.dense_params for s in specs)
+    kf = alloc.lagrange_allocate(specs, budget)
+    ki = alloc.integerize(specs, kf, budget, multiple=1)
+    return {n: int(ki[n]) for n in names}

@@ -1,0 +1,127 @@
+"""LoRA fine-tuning on (compressed) models — the paper's Figure-3 recovery
+path: D-Rank + LoRA beats baselines + LoRA at every ratio.
+
+Adapters ride inside each linear's param dict ("lora_A"/"lora_B"/
+"lora_scale", consumed by ``params.apply_linear``), so the same model code
+serves dense, factorized, and adapted weights. Only adapter leaves get
+gradients (the base tree is closed over, not differentiated)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.params import Params
+from repro.optim.adamw import (AdamWState, OptimizerConfig, adamw_init,
+                               adamw_update)
+
+_LORA_TARGETS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}
+
+
+def _is_linear(d) -> bool:
+    return isinstance(d, dict) and ("w" in d or ("B" in d and "C" in d))
+
+
+def _dims(d) -> Tuple[int, int]:
+    if "w" in d:
+        return int(d["w"].shape[-2]), int(d["w"].shape[-1])
+    return int(d["B"].shape[-2]), int(d["C"].shape[-1])
+
+
+def init_lora(params: Params, cfg: ModelConfig, key: jax.Array,
+              rank: int = 8, alpha: float = 32.0) -> Dict:
+    """Returns a sparse adapter tree {joined-path: {"lora_A","lora_B",
+    "lora_scale"}} over every target linear (stacked runs get a leading
+    stack dim; list runs get per-layer entries)."""
+    adapters: Dict[str, Dict] = {}
+    n = [0]
+
+    def walk(node, path):
+        if _is_linear(node) and path and str(path[-1]) in _LORA_TARGETS:
+            d_in, d_out = _dims(node)
+            lead = ()
+            w = node.get("w", node.get("B"))
+            if w.ndim == 3:
+                lead = (w.shape[0],)
+            n[0] += 1
+            k = jax.random.fold_in(key, n[0])
+            adapters["/".join(map(str, path))] = {
+                "lora_A": 0.01 * jax.random.normal(
+                    k, (*lead, d_in, rank), dtype=jnp.float32),
+                "lora_B": jnp.zeros((*lead, rank, d_out),
+                                    dtype=jnp.float32),
+                "lora_scale": jnp.asarray(alpha / rank, dtype=jnp.float32),
+            }
+            return
+        if isinstance(node, dict):
+            for kk, v in node.items():
+                walk(v, path + (kk,))
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(v, path + (i,))
+
+    walk(params, ())
+    return adapters
+
+
+def merge_lora(params: Params, adapters: Dict) -> Params:
+    """Non-destructively insert adapter leaves into the param tree."""
+    def get(tree, path):
+        node = tree
+        for kk in path:
+            node = node[kk]
+        return node
+
+    out = jax.tree.map(lambda x: x, params)      # shallow-ish copy
+
+    def copy_path(tree, path):
+        # rebuild dicts/lists along the path so we never mutate the input
+        node = tree
+        for kk in path:
+            child = node[kk]
+            child = dict(child) if isinstance(child, dict) else list(child)
+            node[kk] = child
+            node = child
+        return node
+
+    for pth, ad in adapters.items():
+        keys = [int(p) if p.isdigit() else p for p in pth.split("/")]
+        out = out if isinstance(out, dict) else out
+        node = copy_path(out, keys)
+        node.update(ad)
+    return out
+
+
+def lora_finetune(params: Params, cfg: ModelConfig,
+                  batches: Iterable[Dict], steps: int,
+                  rank: int = 8, alpha: float = 32.0, lr: float = 1e-4,
+                  seed: int = 0) -> Tuple[Params, List[Dict]]:
+    """Fine-tune adapters only; returns (merged params, history)."""
+    adapters = init_lora(params, cfg, jax.random.PRNGKey(seed), rank, alpha)
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=max(1, steps // 20),
+                           total_steps=steps, weight_decay=0.0)
+    opt = adamw_init(adapters)
+
+    def loss_fn(ad, batch):
+        merged = merge_lora(params, ad)
+        return T.lm_loss(merged, cfg, batch)
+
+    @jax.jit
+    def step_fn(ad, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(ad, batch)
+        ad2, opt2, stats = adamw_update(ocfg, grads, opt, ad)
+        return ad2, opt2, {**metrics, **stats}
+
+    history = []
+    it = iter(batches)
+    for s in range(steps):
+        batch = next(it)
+        adapters, opt, m = step_fn(adapters, opt, batch)
+        if s % 20 == 0 or s == steps - 1:
+            history.append({"step": s, "loss": float(m["loss"])})
+    return merge_lora(params, adapters), history

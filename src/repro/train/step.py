@@ -1,0 +1,129 @@
+"""Train step: microbatched gradient accumulation, bf16 compute / fp32
+optimizer state, remat per block (inside the model's layer scan), AdamW.
+
+The same `train_step` lowers on one CPU device (tests) and on the
+production meshes (dry-run / deploy): sharding comes entirely from the
+in/out shardings the launcher attaches (logical rules in
+``repro.dist.sharding``), never from the step itself.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.params import Params
+from repro.optim.adamw import (AdamWState, OptimizerConfig, adamw_init,
+                               adamw_update)
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1         # grad accumulation steps per train step
+    optimizer: OptimizerConfig = OptimizerConfig()
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array
+                     ) -> Tuple[TrainState, Params]:
+    params, specs = T.init_model(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params)), specs
+
+
+def _microbatch(batch: Dict, n: int, i) -> Dict:
+    """Slice microbatch i of n along the batch dim."""
+    def sl(v):
+        mb = v.shape[0] // n if v.ndim >= 2 and v.shape[0] >= n else None
+        if mb is None:
+            return v
+        return jax.lax.dynamic_slice_in_dim(v, i * mb, mb, axis=0)
+    out = {}
+    for k, v in batch.items():
+        if k.startswith("enc_") or k == "positions":
+            # positions may carry a leading component axis (m-rope: (3,B,S))
+            if k == "positions" and v.ndim == 3:
+                mb = v.shape[1] // n
+                out[k] = jax.lax.dynamic_slice_in_dim(v, i * mb, mb, axis=1)
+                continue
+        out[k] = sl(v)
+    return out
+
+
+def loss_and_grads(params: Params, cfg: ModelConfig, batch: Dict,
+                   microbatches: int = 1):
+    """Microbatched value_and_grad: the loop is a lax.scan so logits of only
+    one microbatch are ever live (vocab-sharded CE peaks at B/n · S · V)."""
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            T.lm_loss, has_aux=True)(params, cfg, batch)
+        return loss, metrics, grads
+
+    def body(carry, i):
+        acc_loss, acc_grads, acc_metrics = carry
+        mb = _microbatch(batch, microbatches, i)
+        (loss, metrics), grads = jax.value_and_grad(
+            T.lm_loss, has_aux=True)(params, cfg, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                           acc_grads, grads)
+        mkeys = ("loss", "accuracy", "tokens")
+        new_metrics = {k: acc_metrics[k] + metrics[k] for k in mkeys}
+        return (acc_loss + loss, acc, new_metrics), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero_m = {"loss": jnp.zeros(()), "accuracy": jnp.zeros(()),
+              "tokens": jnp.zeros(())}
+    (loss, grads, metrics), _ = jax.lax.scan(
+        body, (jnp.zeros(()), zero_g, zero_m),
+        jnp.arange(microbatches))
+    n = float(microbatches)
+    grads = jax.tree.map(lambda g: g / n, grads)
+    metrics = {k: v / n for k, v in metrics.items()}
+    metrics["tokens"] = metrics["tokens"] * n
+    return loss / n, metrics, grads
+
+
+def train_step(state: TrainState, batch: Dict, *, cfg: ModelConfig,
+               tcfg: TrainConfig) -> Tuple[TrainState, Dict]:
+    loss, metrics, grads = loss_and_grads(state.params, cfg, batch,
+                                          tcfg.microbatches)
+    new_params, new_opt, stats = adamw_update(
+        tcfg.optimizer, grads, state.opt, state.params)
+    metrics = dict(metrics)
+    metrics.update(stats)
+    return TrainState(params=new_params, opt=new_opt), metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    return functools.partial(train_step, cfg=cfg, tcfg=tcfg)
+
+
+# ---------------------------------------------------------------------------
+# Eval
+# ---------------------------------------------------------------------------
+def eval_step(params: Params, cfg: ModelConfig, batch: Dict) -> Dict:
+    _, metrics = T.lm_loss(params, cfg, batch)
+    return metrics
+
+
+def evaluate_ppl(params: Params, cfg: ModelConfig, batches) -> Dict:
+    """Token-weighted perplexity over an iterable of batches."""
+    tot_nll, tot_tok, tot_acc = 0.0, 0.0, 0.0
+    for b in batches:
+        m = eval_step(params, cfg, b)
+        tok = float(m["tokens"])
+        tot_nll += float(m["loss"]) * tok
+        tot_acc += float(m["accuracy"]) * tok
+        tot_tok += tok
+    import math
+    nll = tot_nll / max(1.0, tot_tok)
+    return {"nll": nll, "ppl": math.exp(min(nll, 30.0)),
+            "accuracy": tot_acc / max(1.0, tot_tok)}

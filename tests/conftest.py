@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS / device-count overrides here —
+smoke tests and benches must see the real single CPU device. Only
+``repro/launch/dryrun.py`` (run as its own process) forces 512 host devices.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, key, batch=2, seq=16, enc_len=12):
+    """Standard smoke batch for any assigned architecture."""
+    kt, ke, kl, kenc = jax.random.split(key, 4)
+    b = {}
+    if cfg.is_encoder_decoder:
+        # frontend stub (audio) feeds the ENCODER; the decoder sees tokens
+        b["enc_embeds"] = 0.02 * jax.random.normal(
+            kenc, (batch, enc_len, cfg.d_model), dtype=jnp.float32)
+        b["tokens"] = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)
+    elif cfg.frontend:
+        # decoder-only multimodal backbone (vlm): precomputed patch embeds
+        b["embeds"] = 0.02 * jax.random.normal(
+            ke, (batch, seq, cfg.d_model), dtype=jnp.float32)
+        b["labels"] = jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size)
+    else:
+        b["tokens"] = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)
+    return b

@@ -1,0 +1,260 @@
+"""D-Rank core: numerics, allocator, and end-to-end compression invariants.
+Property tests use hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import allocate as alloc
+from repro.core import numerics as num
+from repro.core import compress as CC
+from repro.core.capture import to_list_params
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Effective rank (paper §3.2.1)
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=64),
+       st.floats(0.01, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_effective_rank_properties(sigmas, scale):
+    s = np.array(sigmas)
+    r = num.effective_rank(s)
+    # bounds: 1 <= R_eff <= #nonzero
+    assert 1.0 - 1e-9 <= r <= len(s) + 1e-6
+    # scale invariance
+    assert np.isclose(num.effective_rank(scale * s), r, rtol=1e-6)
+
+
+def test_effective_rank_flat_spectrum():
+    for n in (1, 4, 37):
+        s = np.ones(n)
+        assert np.isclose(num.effective_rank(s), n, rtol=1e-6)
+
+
+def test_effective_rank_single_dominant():
+    s = np.array([100.0, 1e-9, 1e-9])
+    assert num.effective_rank(s) < 1.001
+
+
+# ---------------------------------------------------------------------------
+# Whitening optimality: the whitened truncation minimizes ‖X(W-Ŵ)‖
+# ---------------------------------------------------------------------------
+def test_whitened_svd_beats_plain_on_activation_loss():
+    rng = np.random.default_rng(0)
+    d_in, d_out, n_tok, k = 32, 48, 256, 8
+    # anisotropic activations
+    A = rng.normal(size=(d_in, d_in))
+    X = rng.normal(size=(n_tok, d_in)) @ A
+    W = rng.normal(size=(d_in, d_out))
+    G = X.T @ X
+
+    def act_err(What):
+        return np.linalg.norm(X @ (W - What))
+
+    wh = num.cholesky_whitener(G, damp=1e-9)
+    U, s, Vt = num.whitened_svd(W, wh)
+    B, C = num.truncate_factors(U, s, Vt, k, wh)
+    whitened_err = act_err(B @ C)
+
+    wh0 = num.identity_whitener()
+    U0, s0, Vt0 = num.whitened_svd(W, wh0)
+    B0, C0 = num.truncate_factors(U0, s0, Vt0, k, wh0)
+    plain_err = act_err(B0 @ C0)
+
+    assert whitened_err < plain_err * 0.999
+
+    # full rank reproduces W exactly
+    Bf, Cf = num.truncate_factors(U, s, Vt, min(d_in, d_out), wh)
+    assert np.allclose(Bf @ Cf, W, atol=1e-8)
+
+
+def test_whitened_truncation_is_optimal_among_rank_k():
+    """Eckart–Young in the whitened metric: no random rank-k factorization
+    beats the whitened SVD truncation on ‖X(W-Ŵ)‖."""
+    rng = np.random.default_rng(1)
+    d, m, k = 24, 24, 6
+    X = rng.normal(size=(200, d)) * np.linspace(0.1, 3.0, d)
+    W = rng.normal(size=(d, m))
+    G = X.T @ X
+    wh = num.cholesky_whitener(G, damp=1e-10)
+    U, s, Vt = num.whitened_svd(W, wh)
+    B, C = num.truncate_factors(U, s, Vt, k, wh)
+    best = np.linalg.norm(X @ (W - B @ C))
+    for seed in range(10):
+        r2 = np.random.default_rng(100 + seed)
+        Br = r2.normal(size=(d, k))
+        # optimal C given random B (least squares in whitened space)
+        M = X @ Br
+        Cr = np.linalg.lstsq(M, X @ W, rcond=None)[0]
+        err = np.linalg.norm(X @ (W - Br @ Cr))
+        assert best <= err * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Lagrange allocator (paper eq 13-19)
+# ---------------------------------------------------------------------------
+def _mk_groups(reffs, omegas, kmaxes=None, dense=None):
+    gs = []
+    for i, (r, w) in enumerate(zip(reffs, omegas)):
+        gs.append(alloc.GroupSpec(
+            gid=f"g{i}", mtype="q", reff=r, omega=w,
+            kmax=(kmaxes[i] if kmaxes else 10 ** 9),
+            dense_params=(dense[i] if dense else w * 100)))
+    return gs
+
+
+@given(st.lists(st.floats(100.0, 1e4), min_size=2, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_lagrange_budget_and_proportionality(reffs):
+    # reff range chosen so no group hits its k_min/k_max clamp — the
+    # closed-form proportionality only holds for unclamped groups
+    omegas = [128] * len(reffs)
+    gs = _mk_groups(reffs, omegas)
+    budget = 128.0 * 50 * len(reffs)
+    k = alloc.lagrange_allocate(gs, budget)
+    # budget met exactly (no clamps active)
+    spent = sum(k[g.gid] * g.omega for g in gs)
+    assert np.isclose(spent, budget, rtol=1e-6)
+    # k_g proportional to sqrt(reff) at equal omega
+    ks = np.array([k[f"g{i}"] for i in range(len(reffs))])
+    rs = np.sqrt(np.array(reffs))
+    ratio = ks / rs
+    assert np.allclose(ratio, ratio[0], rtol=1e-5)
+
+
+def test_lagrange_omega_inverse_sqrt():
+    gs = _mk_groups([100.0, 100.0], [64, 256])
+    k = alloc.lagrange_allocate(gs, 64.0 * 100 + 256.0 * 100)
+    # k ∝ 1/sqrt(omega)
+    assert np.isclose(k["g0"] / k["g1"], np.sqrt(256 / 64), rtol=1e-6)
+
+
+def test_lagrange_clamping_redistributes():
+    gs = _mk_groups([1e6, 1.0, 1.0], [10, 10, 10], kmaxes=[5, 1000, 1000])
+    budget = 10.0 * 100
+    k = alloc.lagrange_allocate(gs, budget)
+    assert k["g0"] == 5.0
+    spent = sum(k[g.gid] * g.omega for g in gs)
+    assert spent <= budget * (1 + 1e-9)
+    assert np.isclose(k["g1"], k["g2"], rtol=1e-6)
+
+
+def test_beta_rebalance_budget_conserving_in_rank_units():
+    gs = (_mk_groups([10, 10], [8, 8]) +
+          [alloc.GroupSpec("gk0", "k", 10, 8, 10 ** 9, dense_params=800),
+           alloc.GroupSpec("gv0", "v", 10, 8, 10 ** 9, dense_params=800)])
+    gs[0].mtype = "q"
+    gs[1].mtype = "q"
+    k = {"g0": 10.0, "g1": 20.0, "gk0": 30.0, "gv0": 5.0}
+    k2 = alloc.beta_rebalance(gs, k, beta=0.3)
+    assert np.isclose(sum(k2.values()), sum(k.values()))
+    assert k2["g0"] == pytest.approx(7.0)
+    assert k2["gk0"] == pytest.approx(21.0)
+    assert k2["gv0"] == pytest.approx(5.0 + 0.3 * 60)
+
+
+def test_integerize_respects_budget_and_multiple():
+    gs = _mk_groups([50.0, 500.0, 5000.0], [100, 100, 100],
+                    kmaxes=[64, 64, 64], dense=[6400, 6400, 6400])
+    budget = 0.8 * 3 * 6400
+    kf = alloc.lagrange_allocate(gs, budget)
+    ki = alloc.integerize(gs, kf, budget, multiple=8)
+    assert all(v % 8 == 0 or v == gs[i].kmax
+               for i, v in enumerate(ki.values()))
+    assert sum(ki[g.gid] * g.omega for g in gs) <= budget
+    # monotone in reff
+    assert ki["g0"] <= ki["g1"] <= ki["g2"]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end compression invariants
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mini_setup():
+    cfg = get_config("llama-mini")
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    batches = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                             (2, 64), 0, cfg.vocab_size)}
+               for i in range(2)]
+    return cfg, params, batches
+
+
+@pytest.mark.parametrize("method", ["svd", "asvd", "svdllm", "basis",
+                                    "drank", "dranke"])
+def test_methods_hit_target_ratio(mini_setup, method):
+    cfg, params, batches = mini_setup
+    ccfg = CC.CompressionConfig(method=method, ratio=0.3, group_size=2,
+                                beta=0.3)
+    new_lp, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    assert abs(plan.summary["achieved_ratio"] - 0.3) < 0.02
+    # compressed model still runs and is finite
+    loss, _ = T.lm_loss(new_lp, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+def test_drank_allocates_by_information(mini_setup):
+    cfg, params, batches = mini_setup
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2,
+                                beta=0.0)
+    _, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    # within a type, higher reff => rank no smaller (weak monotonicity)
+    by_type = {}
+    for g in plan.groups:
+        by_type.setdefault(g.mtype, []).append(g)
+    checked = 0
+    for t, gs in by_type.items():
+        gs = sorted(gs, key=lambda g: g.reff)
+        for a, b in zip(gs, gs[1:]):
+            if b.reff > a.reff * 1.05 and a.k < a.kmax and b.k < b.kmax:
+                assert b.k >= a.k, (t, a.gid, b.gid)
+                checked += 1
+    assert checked > 0
+
+
+def test_fwsvd_runs(mini_setup):
+    cfg, params, batches = mini_setup
+    ccfg = CC.CompressionConfig(method="fwsvd", ratio=0.3)
+    new_lp, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    loss, _ = T.lm_loss(new_lp, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+def test_near_lossless_at_tiny_ratio(mini_setup):
+    """At ~0 compression the whitened factorization must reproduce the
+    model almost exactly (Eckart-Young at full retained rank)."""
+    cfg, params, batches = mini_setup
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.02, group_size=1,
+                                beta=0.0)
+    new_lp, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    l0, _ = T.lm_loss(params, cfg, batches[0])
+    l1, _ = T.lm_loss(new_lp, cfg, batches[0])
+    assert abs(float(l1) - float(l0)) < 0.05
+
+
+def test_plan_roundtrip(mini_setup):
+    cfg, params, batches = mini_setup
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.25)
+    _, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    plan2 = CC.Plan.from_json(plan.to_json())
+    assert plan2.summary == pytest.approx(plan.summary)
+    assert [g.gid for g in plan2.groups] == [g.gid for g in plan.groups]
+
+
+def test_moe_expert_compression():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(9)
+    batches = [{"tokens": jax.random.randint(key, (2, 32), 0,
+                                             cfg.vocab_size)}]
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.2, group_size=2)
+    new_lp, plan = CC.build_plan_and_params(params, cfg, ccfg, batches)
+    xg = [g for g in plan.groups if g.mtype.startswith("x")]
+    assert len(xg) > 0, "routed experts were not compressed"
+    loss, _ = T.lm_loss(new_lp, cfg, batches[0])
+    assert jnp.isfinite(loss)

@@ -1,0 +1,142 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps asserted
+allclose against the pure-jnp oracles in repro/kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rnd(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return {"float32": 2e-5, "bfloat16": 2e-2}[jnp.dtype(dtype).name]
+
+
+# ---------------------------------------------------------------------------
+# lowrank_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,R,N", [
+    (128, 256, 32, 256),      # aligned
+    (64, 512, 128, 1024),     # bigger rank
+    (100, 200, 24, 300),      # ragged everything (wrapper pads)
+    (1, 256, 16, 256),        # decode-shaped single token
+    (1024, 128, 8, 128),      # long m
+])
+def test_lowrank_matmul_sweep(M, K, R, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = rnd(ks[0], (M, K), dtype)
+    B = rnd(ks[1], (K, R), dtype) * 0.1
+    C = rnd(ks[2], (R, N), dtype) * 0.1
+    y = ops.lowrank_matmul(x, B, C)
+    yr = ref.lowrank_matmul(x, B, C)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - yr.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(yr.astype(jnp.float32)))) + 1e-6
+    assert err / scale < tol(dtype), (err, scale)
+
+
+def test_lowrank_matmul_leading_dims():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = rnd(ks[0], (2, 3, 64, 128), jnp.float32)
+    B = rnd(ks[1], (128, 16), jnp.float32)
+    C = rnd(ks[2], (16, 96), jnp.float32)
+    y = ops.lowrank_matmul(x, B, C)
+    assert y.shape == (2, 3, 64, 96)
+    assert jnp.allclose(y, ref.lowrank_matmul(x, B, C), atol=1e-4)
+
+
+def test_lowrank_matmul_grads_match_dense_chain():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = rnd(ks[0], (8, 64), jnp.float32)
+    B = rnd(ks[1], (64, 8), jnp.float32) * 0.2
+    C = rnd(ks[2], (8, 32), jnp.float32) * 0.2
+    g1 = jax.grad(lambda *a: jnp.sum(ops.lowrank_matmul(*a) ** 2),
+                  argnums=(0, 1, 2))(x, B, C)
+    g2 = jax.grad(lambda x, B, C: jnp.sum(((x @ B) @ C) ** 2),
+                  argnums=(0, 1, 2))(x, B, C)
+    for a, b in zip(g1, g2):
+        assert jnp.allclose(a, b, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window,cap", [
+    (2, 128, 4, 2, 64, True, 0, 0.0),      # GQA causal
+    (1, 256, 8, 8, 32, True, 64, 0.0),     # MHA sliding window
+    (2, 128, 4, 1, 64, True, 0, 50.0),     # MQA + softcap
+    (1, 64, 2, 2, 128, False, 0, 0.0),     # bidirectional (encoder)
+    (2, 96, 6, 2, 64, True, 32, 0.0),      # ragged block sizes
+    (1, 8, 4, 4, 16, True, 0, 0.0),        # tiny
+])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rnd(ks[0], (B, S, H, hd), dtype)
+    k = rnd(ks[1], (B, S, KV, hd), dtype)
+    v = rnd(ks[2], (B, S, KV, hd), dtype)
+    o = ops.flash_attention(q, k, v, causal, window, cap)
+    orf = ref.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                - orf.astype(jnp.float32))))
+    assert err < tol(dtype), err
+
+
+def test_flash_attention_grad_falls_back_to_ref():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rnd(ks[0], (1, 32, 2, 16), jnp.float32)
+    k = rnd(ks[1], (1, 32, 2, 16), jnp.float32)
+    v = rnd(ks[2], (1, 32, 2, 16), jnp.float32)
+    g1 = jax.grad(lambda q: jnp.sum(ops.flash_attention(q, k, v) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(ref.flash_attention(q, k, v) ** 2))(q)
+    assert jnp.allclose(g1, g2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,D", [(512, 256), (1000, 200), (64, 512),
+                                 (4096, 64)])
+def test_gram_sweep(N, D, dtype):
+    x = rnd(jax.random.PRNGKey(0), (N, D), dtype)
+    g = ops.gram(x)
+    gr = ref.gram(x)
+    assert g.dtype == jnp.float32
+    rel = float(jnp.max(jnp.abs(g - gr)) / (jnp.max(jnp.abs(gr)) + 1e-6))
+    assert rel < 5e-6 if dtype == jnp.float32 else rel < 5e-2
+
+
+def test_gram_leading_dims():
+    x = rnd(jax.random.PRNGKey(1), (4, 32, 48), jnp.float32)
+    g = ops.gram(x)
+    assert g.shape == (48, 48)
+    assert jnp.allclose(g, ref.gram(x.reshape(-1, 48)), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# integration: the model's use_pallas switch routes through the kernels
+# ---------------------------------------------------------------------------
+def test_model_pallas_path_matches_jnp():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import set_use_pallas
+
+    cfg = get_config("llama-mini").replace(n_layers=2)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0,
+                                          cfg.vocab_size)}
+    l0, _ = T.forward(params, cfg, batch)
+    set_use_pallas(True)
+    try:
+        l1, _ = T.forward(params, cfg, batch)
+    finally:
+        set_use_pallas(False)
+    assert jnp.allclose(l0, l1, atol=2e-3), float(jnp.max(jnp.abs(l0 - l1)))

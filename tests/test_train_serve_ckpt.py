@@ -1,0 +1,208 @@
+"""Training loop, checkpoint store, serving engine, PowerSGD compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.ckpt import store
+from repro.data.synthetic import (DataConfig, ShardedLoader, SyntheticLM,
+                                  calibration_batches)
+from repro.models import transformer as T
+from repro.optim import powersgd as PS
+from repro.optim.adamw import OptimizerConfig
+from repro.serve.engine import (ContinuousBatcher, Engine, Request,
+                                ServeConfig)
+from repro.train import step as TS
+from repro.train.loop import LoopConfig, Trainer
+
+
+CFG = get_config("llama-mini").replace(n_layers=2, d_model=64, n_heads=4,
+                                       n_kv_heads=2, head_dim=16, d_ff=128,
+                                       vocab_size=256)
+
+
+def _dcfg(**kw):
+    d = dict(vocab_size=CFG.vocab_size, seq_len=32, global_batch=4, seed=3)
+    d.update(kw)
+    return DataConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# data determinism / elasticity
+# ---------------------------------------------------------------------------
+def test_loader_elastic_determinism():
+    dcfg = _dcfg()
+    full = ShardedLoader(dcfg).batch(7)["tokens"]
+    parts = [ShardedLoader(dcfg, i, 2).batch(7)["tokens"] for i in range(2)]
+    assert (np.concatenate(parts) == full).all()
+    # different steps differ
+    assert not (ShardedLoader(dcfg).batch(8)["tokens"] == full).all()
+
+
+def test_calibration_disjoint_from_training():
+    dcfg = _dcfg()
+    calib = calibration_batches(dcfg, n_samples=4, batch_size=4)
+    train = ShardedLoader(dcfg).batch(0)["tokens"]
+    assert not (calib[0]["tokens"] == train).all()
+
+
+# ---------------------------------------------------------------------------
+# trainer: loss decreases, checkpoint-resume is bit-exact
+# ---------------------------------------------------------------------------
+def test_trainer_descends_and_resumes(tmp_path):
+    tcfg = TS.TrainConfig(optimizer=OptimizerConfig(
+        lr=5e-3, warmup_steps=5, total_steps=60))
+    lcfg = LoopConfig(total_steps=30, ckpt_dir=str(tmp_path / "ck"),
+                      ckpt_every=10, log_every=5)
+    tr = Trainer(CFG, tcfg, _dcfg(), lcfg, seed=0)
+    out = tr.run()
+    assert out["final_step"] == 30
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+
+    # continuous run to 40
+    lcfg2 = LoopConfig(total_steps=40, ckpt_dir=str(tmp_path / "ck2"),
+                       ckpt_every=100, log_every=5)
+    tr_full = Trainer(CFG, tcfg, _dcfg(), lcfg2, seed=0)
+    full = tr_full.run()
+
+    # resumed run 30 -> 40 from the first job's checkpoint
+    lcfg3 = LoopConfig(total_steps=40, ckpt_dir=str(tmp_path / "ck"),
+                       ckpt_every=100, log_every=5)
+    tr_res = Trainer(CFG, tcfg, _dcfg(), lcfg3, seed=0)
+    assert tr_res.start_step == 30
+    res = tr_res.run()
+    # same data (counter-based) + same state => identical final loss
+    assert res["history"][-1]["loss"] == pytest.approx(
+        full["history"][-1]["loss"], rel=1e-4)
+
+
+def test_ckpt_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    store.save(str(tmp_path), 5, tree)
+    store.save(str(tmp_path), 9, jax.tree.map(lambda x: x * 2, tree))
+    assert store.latest_step(str(tmp_path)) == 9
+    step, back = store.restore(str(tmp_path), tree)
+    assert step == 9
+    assert jnp.allclose(back["a"], tree["a"] * 2)
+    assert back["b"]["c"].dtype == jnp.bfloat16
+    # keep_last pruning
+    for s in (11, 12, 13):
+        store.save(str(tmp_path), s, tree, keep_last=2)
+    names = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(names) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(str(tmp_path), keep_last=2)
+    tree = {"x": jnp.ones((8, 8))}
+    ck.submit(1, tree)
+    ck.submit(2, tree)
+    ck.close()
+    assert store.latest_step(str(tmp_path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def trained_mini():
+    params, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    return params
+
+
+def test_engine_generate_matches_decode(trained_mini):
+    eng = Engine(trained_mini, CFG, ServeConfig(temperature=0.0))
+    prompts = np.arange(12, dtype=np.int32).reshape(2, 6) % CFG.vocab_size
+    out = eng.generate(prompts, n_new=5)
+    assert out.shape == (2, 5)
+    # greedy continuation must match argmax of full forward, step by step
+    toks = jnp.asarray(prompts)
+    for t in range(5):
+        logits, _ = T.forward(trained_mini, CFG, {"tokens": toks})
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        assert (np.asarray(nxt) == out[:, t]).all(), t
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+
+
+def test_continuous_batcher_matches_sequential(trained_mini):
+    scfg = ServeConfig(batch=3, max_len=64, temperature=0.0)
+    cb = ContinuousBatcher(trained_mini, CFG, scfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, CFG.vocab_size, size=(4 + i,),
+                                        dtype=np.int32),
+                    n_new=6) for i in range(5)]
+    for r in reqs:
+        cb.submit(r)
+    done = cb.run_until_drained()
+    assert len(done) == 5
+    eng = Engine(trained_mini, CFG, ServeConfig(temperature=0.0))
+    for r in done:
+        ref = eng.generate(r.tokens[None, :], n_new=6)[0]
+        assert (np.asarray(r.out) == ref).all(), (r.rid, r.out, ref)
+
+
+def test_throughput_meter(trained_mini):
+    eng = Engine(trained_mini, CFG, ServeConfig())
+    m = eng.measure_decode_throughput(batch=2, prompt_len=8, n_new=4)
+    assert m["tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD
+# ---------------------------------------------------------------------------
+def test_powersgd_identity_at_full_rank():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 16))}
+    cfg = PS.PowerSGDConfig(rank=16, min_dim=8)
+    st = PS.init_state(g, cfg)
+    out, st2, stats = PS.compress_decompress(g, st, cfg)
+    # rank == min(dim): exact after one power iteration? not exact, but EF
+    # residual shrinks over repeated rounds on a FIXED gradient
+    errs = []
+    for _ in range(6):
+        out, st, stats = PS.compress_decompress(g, st, cfg)
+        errs.append(float(jnp.linalg.norm(out["w"] - g["w"])))
+    assert errs[-1] < errs[0] * 0.5
+
+
+def test_powersgd_error_feedback_preserves_mean_signal():
+    """With EF, the time-averaged decompressed gradient tracks the true
+    gradient much better than without EF (the EF telescoping sum)."""
+    key = jax.random.PRNGKey(1)
+    g = jax.random.normal(key, (64, 64))
+    T = 40
+
+    def mean_err(ef: bool) -> float:
+        cfg = PS.PowerSGDConfig(rank=2, min_dim=8, ef=ef)
+        st = PS.init_state({"w": g}, cfg)
+        acc = jnp.zeros_like(g)
+        for _ in range(T):
+            out, st, _ = PS.compress_decompress({"w": g}, st, cfg)
+            acc = acc + out["w"]
+        return float(jnp.linalg.norm(acc / T - g) / jnp.linalg.norm(g))
+
+    assert mean_err(True) < 0.7 * mean_err(False)
+
+
+def test_powersgd_byte_reduction_stats():
+    g = {"w": jnp.ones((256, 256))}
+    cfg = PS.PowerSGDConfig(rank=4, min_dim=8)
+    st = PS.init_state(g, cfg)
+    _, _, stats = PS.compress_decompress(g, st, cfg)
+    assert stats["byte_reduction"] > 20     # 256²/(4·512) = 32
+
+
+def test_powersgd_reff_rank_allocation():
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    lowrank_g = jax.random.normal(ks[0], (64, 4)) @ \
+        jax.random.normal(ks[1], (4, 64))
+    fullrank_g = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
+    g = {"low": lowrank_g, "high": fullrank_g}
+    cfg = PS.PowerSGDConfig(rank=4, min_dim=8)
+    ranks = PS.allocate_ranks_by_reff(g, byte_budget_frac=0.2, cfg=cfg)
+    assert ranks["['high']"] > ranks["['low']"]
