@@ -1,0 +1,127 @@
+"""Paper Figure 4 analog, decode-path edition: tokens/s and ms/step for
+dense vs. D-Rank-compressed models across a batch × cache-length grid.
+
+Two execution paths per cell:
+  jnp              — the XLA reference decode (what CPU CI measures; the
+                     dense-vs-compressed gap here is the weight-bandwidth
+                     effect the paper reports)
+  pallas-interpret — the ragged decode-attention + GEMV kernel path run
+                     under the Pallas interpreter (CORRECTNESS evidence
+                     that the deploy path works end to end; interpreter
+                     wall-times are not a perf claim, so only the smallest
+                     grid cell runs it)
+
+Emits ``BENCH_decode.json`` at the repo root — one row per cell with the
+schema ``{bench, config, tokens_per_s, ms_per_step}`` — in addition to the
+usual result cache. ``--smoke`` shrinks the model and grid for CI
+(scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from benchmarks.common import ROOT, cached, calib_batches
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.models import transformer as T
+from repro.models.params import set_use_pallas
+from repro.serve.engine import Engine, ServeConfig
+
+BENCH_JSON = os.path.join(ROOT, "BENCH_decode.json")
+
+GRID = {"batch": (1, 4, 8), "cache_len": (128, 256, 512), "n_new": 16}
+SMOKE_GRID = {"batch": (2,), "cache_len": (32,), "n_new": 2}
+RATIO = 0.5
+
+
+def _variants(cfg, params, calib):
+    ccfg = CC.CompressionConfig(method="drank", ratio=RATIO, group_size=2,
+                                beta=0.3)
+    lp, _ = CC.build_plan_and_params(params, cfg, ccfg, calib)
+    return {"dense": params, f"drank@{RATIO:.0%}": lp}
+
+
+def _measure(eng, batch, cache_len, n_new):
+    warmup = 1
+    prompt_len = max(4, cache_len - n_new - warmup - 1)
+    return eng.measure_decode_throughput(batch=batch, prompt_len=prompt_len,
+                                         n_new=n_new, warmup=warmup)
+
+
+def run(force: bool = False, smoke: bool = False):
+    name = "fig4_decode_path" + ("_smoke" if smoke else "")
+    grid = SMOKE_GRID if smoke else GRID
+
+    def compute():
+        cfg = get_config("llama-mini")
+        if smoke:
+            cfg = cfg.reduced()
+        params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        calib = calib_batches(cfg, n_samples=4, seq_len=32)
+        rows = []
+        for model, p in _variants(cfg, params, calib).items():
+            for b in grid["batch"]:
+                for L in grid["cache_len"]:
+                    eng = Engine(p, cfg, ServeConfig(batch=b, max_len=L))
+                    m = _measure(eng, b, L, grid["n_new"])
+                    rows.append({
+                        "bench": "fig4_decode_path",
+                        "config": {"model": model, "batch": b,
+                                   "cache_len": L, "path": "jnp"},
+                        **m})
+                    print(f"  f4d {model} b={b} L={L} jnp: "
+                          f"{m['tokens_per_s']:.0f} tok/s", flush=True)
+            # smallest cell again on the Pallas path (interpret mode on
+            # CPU): proves the deploy kernels run; timing not comparable
+            b, L = grid["batch"][0], grid["cache_len"][0]
+            eng = Engine(p, cfg, ServeConfig(batch=b, max_len=L))
+            set_use_pallas(True)
+            try:
+                m = _measure(eng, b, L, min(grid["n_new"], 2))
+            finally:
+                set_use_pallas(False)
+            rows.append({
+                "bench": "fig4_decode_path",
+                "config": {"model": model, "batch": b, "cache_len": L,
+                           "path": "pallas-interpret"},
+                **m})
+            print(f"  f4d {model} b={b} L={L} pallas-interpret: ok",
+                  flush=True)
+        return {"rows": rows}
+
+    out = cached(name, compute, force)
+    write_bench_json(out["rows"])
+    return out
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> str:
+    payload = [{"bench": r["bench"], "config": r["config"],
+                "tokens_per_s": r["tokens_per_s"],
+                "ms_per_step": r["ms_per_step"]} for r in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + grid (CI)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(force=args.force, smoke=args.smoke)
+    for r in out["rows"]:
+        c = r["config"]
+        print(f"  {c['model']:10s} b={c['batch']} L={c['cache_len']:4d} "
+              f"{c['path']:16s} {r['tokens_per_s']:8.0f} tok/s "
+              f"({r['ms_per_step']:.1f} ms/step)")
+    print(f"  wrote {BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ to experiments/results/*.json, so re-runs are free.
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 import traceback
 
@@ -19,10 +20,18 @@ def main(argv=None) -> int:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip fig3 (LoRA) and fig4 (wall-clock)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny models/grids where a bench supports it")
+    ap.add_argument("--json", nargs="?", const="BENCH_decode.json",
+                    default="", metavar="PATH",
+                    help="also write decode-path rows "
+                         "({bench, config, tokens_per_s, ms_per_step}) "
+                         "to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig3_lora, fig4_throughput, table1_effective_rank,
-                            table2_gqa, table3_ppl, table5_beta, table8_calib)
+    from benchmarks import (fig3_lora, fig4_decode_path, fig4_throughput,
+                            table1_effective_rank, table2_gqa, table3_ppl,
+                            table5_beta, table8_calib)
 
     def d_table3(out):
         rows = {(r["method"], r.get("ratio")): r["ppl"]
@@ -64,6 +73,19 @@ def main(argv=None) -> int:
         dr = [r for r in out["rows"] if r["method"] == "drank"]
         return f"drank_after={min(r['ppl_after'] for r in dr):.2f}"
 
+    def d_fig4d(out):
+        jnp_rows = [r for r in out["rows"]
+                    if r["config"]["path"] == "jnp"]
+        cell = lambda r: (r["config"]["batch"], r["config"]["cache_len"])
+        dense = {cell(r): r["tokens_per_s"] for r in jnp_rows
+                 if r["config"]["model"] == "dense"}
+        # speedup per matching (batch, cache_len) cell, best cell reported
+        best = max(r["tokens_per_s"] / dense[cell(r)] for r in jnp_rows
+                   if r["config"]["model"] != "dense" and cell(r) in dense)
+        return f"decode_speedup={best:.2f}x"
+
+    fig4_decode = functools.partial(fig4_decode_path.run, smoke=args.smoke)
+
     benches = [
         ("table1_effective_rank", table1_effective_rank.run, d_table1),
         ("table3_ppl", table3_ppl.run, d_table3),
@@ -71,6 +93,7 @@ def main(argv=None) -> int:
         ("table2_gqa", table2_gqa.run, d_table2),
         ("table8_calib", table8_calib.run, d_table8),
         ("fig4_throughput", fig4_throughput.run, d_fig4),
+        ("fig4_decode_path", fig4_decode, d_fig4d),
         ("fig3_lora", fig3_lora.run, d_fig3),
     ]
     if args.skip_slow:
@@ -80,15 +103,21 @@ def main(argv=None) -> int:
 
     print("name,us_per_call,derived")
     rc = 0
+    json_rows = []
     for name, fn, derive in benches:
         try:
             out = fn(force=args.force)
             us = out.get("_wall_s", 0.0) * 1e6
             print(f"{name},{us:.0f},{derive(out)}", flush=True)
+            json_rows += [r for r in out.get("rows", [])
+                          if "tokens_per_s" in r and "bench" in r]
         except Exception as e:
             rc = 1
             traceback.print_exc()
             print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+    if args.json:
+        path = fig4_decode_path.write_bench_json(json_rows, args.json)
+        print(f"# wrote {len(json_rows)} rows to {path}", flush=True)
     return rc
 
 

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + decode-path benchmark smoke (interpret-mode
+# Pallas — this runner has no TPU). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== decode-path benchmark smoke =="
+python -m benchmarks.fig4_decode_path --smoke --force
+
+echo "== BENCH_decode.json =="
+python - <<'EOF'
+import json
+rows = json.load(open("BENCH_decode.json"))
+assert rows, "no benchmark rows"
+for r in rows:
+    assert {"bench", "config", "tokens_per_s", "ms_per_step"} <= set(r), r
+models = {r["config"]["model"] for r in rows}
+assert "dense" in models and len(models) > 1, models
+print(f"ok: {len(rows)} rows, models={sorted(models)}")
+EOF
+echo "CI OK"

@@ -1,0 +1,4 @@
+"""Distribution layer: logical-axis sharding rules (``sharding``) and the
+fault-tolerance primitives (``ft``) — heartbeats, stall detection, and
+speculative data sharding (DESIGN.md §5)."""
+from repro.dist import ft, sharding  # noqa: F401

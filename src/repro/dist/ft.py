@@ -1,0 +1,66 @@
+"""Fault tolerance (DESIGN.md §5): file-based worker heartbeats with stall
+detection, and deterministic row sharding with a speculative-execution
+variant (a healthy worker re-derives a straggler's shard without any
+coordination — both sides compute the same rows from the same counters)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+class Heartbeat:
+    """One JSON heartbeat file per worker; ``beat`` is atomic (tmp+rename)
+    so a reader never sees a torn write."""
+
+    def __init__(self, path: str, worker_id: int = 0):
+        self.path = path
+        self.worker_id = worker_id
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        payload = {"worker_id": self.worker_id, "step": int(step),
+                   "time": time.time()}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+    def read(self) -> Dict:
+        with open(self.path) as f:
+            return json.load(f)
+
+
+def detect_stalled(root: str, deadline_s: float) -> List[str]:
+    """Names of heartbeat files under `root` older than `deadline_s`."""
+    stalled = []
+    now = time.time()
+    for name in sorted(os.listdir(root)):
+        path = os.path.join(root, name)
+        if not os.path.isfile(path) or name.endswith(".tmp"):
+            continue
+        try:
+            with open(path) as f:
+                t = json.load(f).get("time", 0.0)
+        except (json.JSONDecodeError, OSError):
+            t = 0.0
+        if now - t > deadline_s:
+            stalled.append(name)
+    return stalled
+
+
+def shard_rows(n_rows: int, num_shards: int, shard_id: int) -> np.ndarray:
+    """Strided row assignment: disjoint across shards, covers [0, n_rows)."""
+    return np.arange(shard_id, n_rows, num_shards)
+
+
+def speculative_shard(n_rows: int, num_shards: int, shard_id: int,
+                      spare: int = 0) -> np.ndarray:
+    """Rows worker `shard_id` computes when speculating `spare` hops ahead:
+    spare=0 is its own shard; spare=k re-derives the shard of the worker k
+    positions over (used to cover a straggler detected via heartbeats)."""
+    return shard_rows(n_rows, num_shards, (shard_id + spare) % num_shards)

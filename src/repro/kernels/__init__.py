@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the compression-critical hot spots:
-lowrank_matmul (fused x·B·C — the D-Rank deploy form), flash_attention
-(online-softmax, GQA, causal/window), gram (blocked XᵀX for calibration).
+lowrank_matmul / lowrank_gemv (fused x·B·C — the D-Rank deploy form, at
+prefill and decode shapes), flash_attention (online-softmax, GQA,
+causal/window), decode_attention (ragged single-token serving loop with
+length-bounded cache-block skipping), gram (blocked XᵀX for calibration).
 `ops` holds the jit'd public wrappers; `ref` the pure-jnp oracles the
-interpret-mode tests assert against."""
+interpret-mode tests assert against. See DESIGN.md §3."""
 from repro.kernels import ops, ref  # noqa: F401

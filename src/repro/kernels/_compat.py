@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` in newer jax;
+this container pins the older spelling. Resolve once here so every kernel
+module stays written against the current name."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+assert CompilerParams is not None, "no Pallas TPU compiler-params class"

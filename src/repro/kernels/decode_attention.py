@@ -1,0 +1,136 @@
+"""Ragged single-token decode attention over the KV cache pool — the
+serving-loop hot spot (DESIGN.md §3.4).
+
+The decode step attends ONE new query per sequence against that sequence's
+live cache prefix. The jnp reference path scores the entire (B, L) cache
+with a dense fp32 mask every step; at serving shapes (L = max_len, most
+slots short) nearly all of that work is masked out. This kernel instead:
+
+  * takes a per-slot length vector (B,) as a SCALAR-PREFETCH operand, so
+    block index maps can see it before the body runs;
+  * clamps the kv block index to the slot's live prefix — grid steps past
+    ``ceil(len/bk)`` re-address the previous block, and Pallas skips the
+    DMA for an unchanged block index, so dead cache blocks never leave HBM
+    (the compute for those steps is skipped with ``pl.when``);
+  * handles both cache layouts: full (slot s holds position s; valid iff
+    s < len) and ring buffer (slot s holds the latest position p ≡ s mod
+    window; valid iff (pos - s) mod window < min(len, window));
+  * is GQA-aware: grid dim 1 walks kv heads, each step scoring all G
+    grouped q-heads against one kv head — repeated K/V never materialize;
+  * accumulates in fp32 with the online-softmax recurrence (running max m,
+    denominator l, accumulator acc in VMEM scratch across kv steps).
+
+VMEM budget per step (bf16 cache, fp32 acc), bk=128: k/v tiles
+2·128·hd·2 B (hd=128 → 64 KiB), q tile G·hd·2 B, scratch (2·G + G·hd)·4 B
+— negligible against the 16 MiB budget; the kernel is DMA-bound, which is
+exactly why block skipping is the win."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(nkv: int, bk: int, scale: float, window: int, softcap: float,
+            len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    ln = len_ref[b]                                    # pos + 1, >= 1
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if window:
+        bound = nkv                    # ring: every block may hold live slots
+    else:
+        bound = (ln + bk - 1) // bk    # full cache: live prefix only
+
+    @pl.when(ki < bound)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        G = s.shape[0]
+        slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        if window:
+            # ring layout: slot s holds position pos - ((pos - s) mod w)
+            age = jnp.mod(ln - 1 - slot, window)
+            valid = (age < jnp.minimum(ln, window)) & (slot < window)
+        else:
+            valid = slot < ln
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bkgh(q: jax.Array, k: jax.Array, v: jax.Array,
+                          lengths: jax.Array, *, window: int = 0,
+                          softcap: float = 0.0, bk: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, hd) one token per sequence; k/v: (B, L, KV, hd) cache
+    pool (L a multiple of bk — the ops wrapper pads); lengths: (B,) int32 =
+    pos + 1 per slot. window > 0 selects the ring-buffer layout (real ring
+    size = window; L may carry alignment padding past it).
+    Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    L = k.shape[1]
+    assert L % bk == 0, (L, bk)
+    assert lengths.shape == (B,) and lengths.dtype == jnp.int32
+    nkv = L // bk
+    scale = hd ** -0.5
+
+    def kv_index(b, h, ki, len_ref):
+        if window:
+            return (b, ki, h, 0)
+        nb = (len_ref[b] + bk - 1) // bk
+        return (b, jnp.minimum(ki, nb - 1), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ki, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max
+            pltpu.VMEM((G, 1), jnp.float32),     # denominator
+            pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nkv, bk, scale, window, softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(lengths, q, k, v)

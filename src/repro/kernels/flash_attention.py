@@ -20,11 +20,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
 def _kernel(nkv: int, bq: int, bk: int, scale: float, causal: bool,
-            window: int, softcap: float,
+            window: int, softcap: float, kv_len: int,
             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -48,6 +50,9 @@ def _kernel(nkv: int, bq: int, bk: int, scale: float, causal: bool,
         mask &= kpos <= qpos
     if window:
         mask &= kpos > qpos - window
+    if kv_len:
+        # ragged key axis: columns past the real T are alignment padding
+        mask &= kpos < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -69,11 +74,13 @@ def _kernel(nkv: int, bq: int, bk: int, scale: float, causal: bool,
 def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        heads: int, kv_heads: int, causal: bool = True,
                        window: int = 0, softcap: float = 0.0,
-                       bq: int = 128, bk: int = 128,
+                       bq: int = 128, bk: int = 128, kv_len: int = 0,
                        interpret: bool = False) -> jax.Array:
     """q: (B·H, S, hd); k/v: (B·KV, T, hd). q row b·H + h attends kv row
     b·KV + h // (H/KV) — the GQA fold lives in the kv index map, so repeated
-    K/V are never materialized. Returns (B·H, S, hd)."""
+    K/V are never materialized. kv_len > 0 marks key columns >= kv_len as
+    alignment padding (masked in-kernel), which keeps ragged non-causal
+    shapes on the kernel path. Returns (B·H, S, hd)."""
     BH, S, hd = q.shape
     BKV, T, _ = k.shape
     assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
@@ -90,7 +97,7 @@ def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     return pl.pallas_call(
         functools.partial(_kernel, nkv, bq, bk, scale, causal, window,
-                          softcap),
+                          softcap, kv_len),
         grid=(BH, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
@@ -105,6 +112,6 @@ def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(q, k, v)

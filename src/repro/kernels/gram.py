@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(nn: int, xi_ref, xj_ref, g_ref, acc_ref):
     n = pl.program_id(2)
@@ -50,6 +52,6 @@ def gram_blocked(x: jax.Array, *, bi: int = 256, bj: int = 256,
         out_shape=jax.ShapeDtypeStruct((D, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, x)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(nk: int, x_ref, b_ref, c_ref, y_ref, t_ref):
     s = pl.program_id(1)
@@ -47,6 +49,67 @@ def _kernel(nk: int, x_ref, b_ref, c_ref, y_ref, t_ref):
         y_ref[...] = jnp.dot(t_ref[...].astype(c_ref.dtype), c_ref[...],
                              preferred_element_type=jnp.float32
                              ).astype(y_ref.dtype)
+
+
+def _gemv_kernel(nk: int, x_ref, b_ref, c_ref, y_ref, t_ref):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    @pl.when(s < nk)
+    def _accumulate():
+        t_ref[...] += jnp.dot(x_ref[...], b_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(s >= nk)
+    def _emit():
+        y_ref[...] = jnp.dot(t_ref[...].astype(c_ref.dtype), c_ref[...],
+                             preferred_element_type=jnp.float32
+                             ).astype(y_ref.dtype)
+
+
+def lowrank_gemv(x: jax.Array, B: jax.Array, C: jax.Array, *,
+                 bk: int = 512, bn: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """Decode-shaped fused low-rank matmul: y = (x @ B) @ C for SMALL M
+    (M = decode batch, ≤ 64 rows after the ops wrapper pads to a sublane
+    multiple of 8 — never a full 128 MXU tile).
+
+    1-D grid (k-steps then n-steps), single m-block: each step streams
+    exactly one (M×bk) x-tile + (bk×R) B-tile, or one (R×bn) C-tile; the
+    rank-R intermediate lives in a (M×R) fp32 scratch. Every activation
+    and weight byte is read exactly once — decode is weight-bandwidth-
+    bound, so the wrapper aligns K/N to 128 (not the prefill kernel's 512)
+    to keep zero-padding traffic off the ragged shapes the compressor
+    emits, and pads M only to the 8-row sublane, never a 128 MXU tile.
+
+    VMEM: x M·K·2 B (M≤64, K≤16384 → ≤2 MiB), B tile bk·R·2, C tile
+    R·bn·2, t M·R·4 — inside budget with double buffering at defaults."""
+    M, K = x.shape
+    R = B.shape[1]
+    N = C.shape[1]
+    assert M <= 64 and K % bk == 0 and N % bn == 0, (M, K, N, bk, bn)
+    nk = K // bk
+    nn = N // bn
+    grid = (nk + nn,)
+
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, bk), lambda s: (0, jnp.minimum(s, nk - 1))),
+            pl.BlockSpec((bk, R), lambda s: (jnp.minimum(s, nk - 1), 0)),
+            pl.BlockSpec((R, bn), lambda s: (0, jnp.maximum(s - nk, 0))),
+        ],
+        out_specs=pl.BlockSpec((M, bn), lambda s: (0, jnp.maximum(s - nk, 0))),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((M, R), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x, B, C)
 
 
 def lowrank_matmul_2d(x: jax.Array, B: jax.Array, C: jax.Array, *,
@@ -75,6 +138,6 @@ def lowrank_matmul_2d(x: jax.Array, B: jax.Array, C: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, R), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(x, B, C)

@@ -15,9 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_bkgh
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.gram import gram_blocked
-from repro.kernels.lowrank_matmul import lowrank_matmul_2d
+from repro.kernels.lowrank_matmul import lowrank_gemv, lowrank_matmul_2d
+
+# At or below this many flattened rows the low-rank matmul is decode-shaped:
+# route to the weight-streaming GEMV kernel instead of the prefill tiler.
+GEMV_MAX_ROWS = 64
 
 
 def _on_tpu() -> bool:
@@ -52,7 +57,21 @@ def _lowrank_fwd_impl(x, B, C):
     N = C.shape[-1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
-    bm = 128 if M >= 128 else _round_up(max(M, 8), 8)
+    if M <= GEMV_MAX_ROWS:
+        # decode shape: pad rows to the 8-sublane only and K/N to 128 —
+        # the batch never fills an MXU tile, and tighter alignment keeps
+        # zero padding out of the weight stream (the decode bottleneck).
+        Mp = _round_up(M, 8)
+        Kp = _round_up(K, 128)
+        Np = _round_up(N, 128)
+        bk = Kp if Kp <= 512 else 128
+        bn = Np if Np <= 512 else 128
+        xp = _pad_to(_pad_to(x2, 0, Mp), 1, bk)
+        y = lowrank_gemv(xp, _pad_to(B.astype(x.dtype), 0, bk),
+                         _pad_to(C.astype(x.dtype), 1, bn),
+                         bk=bk, bn=bn, interpret=not _on_tpu())
+        return y[:M, :N].reshape(*lead, N)
+    bm = 128
     bk = min(512, _round_up(K, 128))
     bn = min(512, _round_up(N, 128))
     xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
@@ -105,23 +124,13 @@ def _flash_fwd_impl(q, k, v, causal, window, softcap):
     qb = _pad_to(q.transpose(0, 2, 1, 3).reshape(B * H, S, hd), 1, bq)
     kb = _pad_to(k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd), 1, bk)
     vb = _pad_to(v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd), 1, bk)
-    # padded kv columns must never win the max: rely on position masking —
-    # padded kpos >= T only passes the mask when causal=False and window=0;
-    # force a window covering exactly the real T in that case.
-    win = window
-    causal_eff = causal
-    if not causal and not window and Tp != T:
-        kb = kb.at[:, T:].set(0)
-        vb = vb.at[:, T:].set(0)
-        # mask via explicit window over positions is wrong here; instead use
-        # causal=False with a "length mask" emulated by softcap-free -inf:
-        # simplest robust route: fall back to reference for ragged bidir.
-        o = ref.flash_attention(q, k, v, causal=causal, window=window,
-                                softcap=softcap)
-        return o
+    # padded kv columns must never win the max: the kernel masks kpos >=
+    # kv_len explicitly, so ragged non-causal shapes stay on the kernel
+    # path (causal already kills padded kpos for every real q row).
     o = flash_attention_bh(qb, kb, vb, heads=H, kv_heads=KV,
-                           causal=causal_eff, window=win, bq=bq, bk=bk,
-                           softcap=softcap, interpret=not _on_tpu())
+                           causal=causal, window=window, bq=bq, bk=bk,
+                           softcap=softcap, kv_len=T if Tp != T else 0,
+                           interpret=not _on_tpu())
     o = o[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
     return o
 
@@ -140,6 +149,32 @@ def _flash_bwd(causal, window, softcap, res, g):
 
 
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token vs. the ragged KV cache pool)
+# ---------------------------------------------------------------------------
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, window: int = 0,
+                     softcap: float = 0.0) -> jax.Array:
+    """q: (B, H, hd) — one new token per sequence; k/v: (B, L, KV, hd)
+    cache pool; lengths: (B,) int32 per-slot live length (pos + 1).
+    window > 0 = ring-buffer cache layout. Returns (B, H, hd).
+
+    Pads the cache length to a block multiple (padded slots are masked
+    in-kernel) — never transposes or copies the pool itself. Inference-
+    only: no vjp (the decode step is never differentiated)."""
+    B, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(128, _round_up(L, 8))
+    if L % bk:
+        k = _pad_to(k, 1, bk)
+        v = _pad_to(v, 1, bk)
+    o = decode_attention_bkgh(
+        q.reshape(B, KV, G, hd), k, v, lengths.astype(jnp.int32),
+        window=window, softcap=softcap, bk=bk, interpret=not _on_tpu())
+    return o.reshape(B, H, hd)
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,38 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(Bb, S, H, hd).astype(q.dtype)
 
 
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, window: int = 0,
+                     softcap: float = 0.0) -> jax.Array:
+    """Ragged single-token decode attention, dense-mask formulation — the
+    oracle for kernels/decode_attention.py and numerically the same thing
+    models/attention.attend_decode computes on the jnp path.
+
+    q: (B, H, hd) one query per sequence; k/v: (B, L, KV, hd) cache pool;
+    lengths: (B,) int32 = pos + 1. window > 0 = ring-buffer layout (ring
+    size window; slots >= window are alignment padding).
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    slot = jnp.arange(L)[None, :]                       # (1, L)
+    pos = (lengths - 1)[:, None]
+    if window:
+        age = jnp.mod(pos - slot, window)
+        valid = (age < jnp.minimum(pos + 1, window)) & (slot < window)
+    else:
+        valid = slot <= pos
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def gram(x: jax.Array) -> jax.Array:
     """G = XᵀX with fp32 accumulation. x: (N, D) -> (D, D) fp32."""
     xf = x.astype(jnp.float32)

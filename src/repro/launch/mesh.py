@@ -14,18 +14,27 @@ reduce-scatter intra-pod over ICI, all-reduce across pods over DCI);
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are Auto-typed
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist —
     used by the sharded-smoke tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

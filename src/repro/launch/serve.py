@@ -85,6 +85,7 @@ def main(argv=None) -> int:
         "tokens_per_s": round(toks / dt, 1),
         "mean_latency_s": round(float(np.mean(lat)), 3),
         "p95_latency_s": round(float(np.percentile(lat, 95)), 3),
+        "engine_stats": cb.stats,     # jit retraces, admissions
     }, indent=1))
     return 0
 

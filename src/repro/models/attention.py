@@ -402,30 +402,64 @@ def attend_decode(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     slot = jnp.mod(pos, L) if window else pos          # (B,)
     k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
     v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
-    kpos = jnp.arange(L)[None, :]                      # (1, L)
-    pcol = pos[:, None]
-    if window:
-        # ring buffer: valid slots hold positions in (pos-window, pos]
-        age = jnp.mod(pcol - kpos, L)
-        valid = age < jnp.minimum(pcol + 1, L)
-    else:
-        valid = kpos <= pcol
-    mask = valid[:, None, None, :]                     # (B,1,1,L)
     k = constrain(k, "batch", "kv_seq" if not window else None, None, None)
     v = constrain(v, "batch", "kv_seq" if not window else None, None, None)
-    out = _sdpa(cfg, q, k, v, mask)
+    if use_pallas():
+        # ragged decode kernel: per-slot lengths, block-skipped dead cache
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q[:, 0], k, v, pos + 1, window=window,
+                                    softcap=cfg.attn_logit_softcap)
+        out = out.reshape(B, 1, cfg.q_dim)
+    else:
+        kpos = jnp.arange(L)[None, :]                  # (1, L)
+        pcol = pos[:, None]
+        if window:
+            # ring buffer: valid slots hold positions in (pos-window, pos]
+            age = jnp.mod(pcol - kpos, L)
+            valid = age < jnp.minimum(pcol + 1, L)
+        else:
+            valid = kpos <= pcol
+        mask = valid[:, None, None, :]                 # (B,1,1,L)
+        out = _sdpa(cfg, q, k, v, mask)
     out = apply_linear(p["wo"], out)
     return out, {"k": k, "v": v}
+
+
+def _cache_slots(k: jax.Array, lengths: jax.Array, L: int,
+                 window: int) -> jax.Array:
+    """Gather prefill K (or V) into the decode-cache slot layout.
+
+    Full cache (window=0): slot s holds position s; live iff s < len.
+    Ring: slot s (< window) holds the LATEST position p ≡ s (mod window)
+    with p < len. A gather (one source position per slot, per row) instead
+    of the old scatter, so per-row ragged lengths cost nothing extra.
+    k: (B, S, K, hd) -> (B, L, K, hd)."""
+    B, S = k.shape[0], k.shape[1]
+    s = jnp.arange(L)[None, :]                               # (1, L)
+    if window:
+        cycles = (lengths[:, None] - 1 - s) // window        # floor div
+        p = s + cycles * window
+        valid = (p >= 0) & (s < window)
+    else:
+        p = jnp.broadcast_to(s, (B, L))
+        valid = s < lengths[:, None]
+    g = jnp.take_along_axis(k, jnp.clip(p, 0, S - 1)[..., None, None],
+                            axis=1)
+    return jnp.where(valid[..., None, None], g, jnp.zeros_like(g))
 
 
 def attend_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
                    angles: Optional[jax.Array], *, causal: bool = True,
                    window: int = 0, max_len: int = 0,
+                   lengths: Optional[jax.Array] = None,
                    ) -> Tuple[jax.Array, Dict]:
     """Full-sequence attention that also materializes the decode cache.
 
     Full cache: k/v placed at [0, S) of a (B, max_len, ...) buffer.
-    Windowed: ring layout — the last `window` tokens land at slot pos%window.
+    Windowed: ring layout — the last `window` live tokens land at slot
+    pos%window. `lengths` (B,) marks per-row live prompt lengths when the
+    batch is right-padded to a bucket (continuous-batching admission);
+    slots past a row's length are zeroed (and masked during decode).
     """
     B, S, _ = x.shape
     q, k, v = _qkv(p, cfg, x, angles)
@@ -442,16 +476,10 @@ def attend_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
     out = apply_linear(p["wo"], out)
 
     L = window if window else max_len
-    ck = jnp.zeros((B, L, cfg.n_kv_heads, cfg.head_dim), dtype=k.dtype)
-    cv = jnp.zeros_like(ck)
-    if window and S > window:
-        tail = jnp.arange(S - window, S)
-        ck = ck.at[:, tail % window].set(k[:, tail])
-        cv = cv.at[:, tail % window].set(v[:, tail])
-    else:
-        n = min(S, L)
-        ck = ck.at[:, :n].set(k[:, S - n:])
-        cv = cv.at[:, :n].set(v[:, S - n:])
+    if lengths is None:
+        lengths = jnp.full((B,), S, dtype=jnp.int32)
+    ck = _cache_slots(k, lengths, L, window).astype(k.dtype)
+    cv = _cache_slots(v, lengths, L, window).astype(v.dtype)
     ck = constrain(ck, "batch", "kv_seq" if not window else None, None, None)
     cv = constrain(cv, "batch", "kv_seq" if not window else None, None, None)
     return out, {"k": ck, "v": cv}

@@ -451,18 +451,22 @@ def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
 
 
 def _block_prefill(kind: str, cfg: ModelConfig, p: Params, x: jax.Array,
-                   angles, max_len: int, enc_out) -> Tuple[jax.Array, Dict]:
+                   angles, max_len: int, enc_out,
+                   lengths: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict]:
     cache: Dict[str, Any] = {}
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     win = _kind_window(cfg, kind)
     if kind in ("attn", "swa"):
         out, kv = attend_prefill(p["attn"], cfg, h, angles, causal=True,
-                                 window=win, max_len=max_len)
+                                 window=win, max_len=max_len,
+                                 lengths=lengths)
         x = x + out
         cache["kv"] = kv
     elif kind in ("hymba", "hymba_g"):
         a, kv = attend_prefill(p["attn"], cfg, h, angles, causal=True,
-                               window=win, max_len=max_len)
+                               window=win, max_len=max_len,
+                               lengths=lengths)
         s, sst = mamba.apply_ssm(p["ssm"], cfg, h, return_cache=True)
         x = x + mamba.hymba_combine(p, cfg, a, s)
         cache["kv"], cache["ssm"] = kv, sst
@@ -497,7 +501,16 @@ def _block_prefill(kind: str, cfg: ModelConfig, p: Params, x: jax.Array,
 def prefill(params: Params, cfg: ModelConfig, batch: Dict,
             max_len: int) -> Tuple[jax.Array, Dict]:
     """Process the prompt, build the decode cache. Returns
-    (logits of the last position (B, 1, V), cache)."""
+    (logits of the last live position (B, 1, V), cache).
+
+    `batch["lengths"]` (B,) int32, optional: per-row live prompt lengths
+    when prompts are right-padded to a common bucket (continuous-batching
+    admission). Cache slots past a row's length are zeroed/masked, the
+    returned logits are each row's last LIVE position, and cache `pos`
+    starts at the per-row length. Recurrent-state kinds (ssm/lstm) carry
+    state through padded steps, so callers only pass `lengths` for pure
+    attention stacks — see ContinuousBatcher."""
+    lengths = batch.get("lengths")
     enc_out = encode(params, cfg, batch) if cfg.is_encoder_decoder else None
     if "embeds" in batch:
         x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
@@ -516,7 +529,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict,
         run_p = params["decoder"][f"run{r}"]
 
         def body(pl, xx):
-            return _block_prefill(kind, cfg, pl, xx, angles, max_len, enc_out)
+            return _block_prefill(kind, cfg, pl, xx, angles, max_len,
+                                  enc_out, lengths)
 
         if isinstance(run_p, list):
             caches = []
@@ -539,7 +553,12 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict,
             x, nc = jax.lax.scan(scan_body, x, run_p)
             new_runs[f"run{r}"] = nc
         x = constrain(x, "batch", "seq", None)
-    logits = lm_logits(params, cfg, x[:, -1:])
-    cache = {"runs": new_runs,
-             "pos": jnp.full((B,), S, dtype=jnp.int32)}
+    if lengths is None:
+        x_last = x[:, -1:]
+        pos0 = jnp.full((B,), S, dtype=jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+        pos0 = lengths.astype(jnp.int32)
+    logits = lm_logits(params, cfg, x_last)
+    cache = {"runs": new_runs, "pos": pos0}
     return logits, cache

@@ -92,11 +92,15 @@ class Engine:
             b["enc_embeds"] = jnp.zeros(
                 (batch, prompt_len, self.cfg.d_model), dtype=jnp.float32)
         logits, cache = jax.jit(lambda p, bb: T.prefill(
-            p, self.cfg, bb, max_len=prompt_len + n_new + 1))(self.params, b)
+            p, self.cfg, bb, max_len=prompt_len + warmup + n_new + 1))(
+                self.params, b)
         tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        # warmup advances the cache (each step decodes a fresh position,
+        # like the timed loop) and is safely skippable with warmup=0
         for _ in range(warmup):
-            lg, cache2 = self._decode(self.params, cache, tok)
-        jax.block_until_ready(lg)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
         t0 = time.perf_counter()
         for _ in range(n_new):
             logits, cache = self._decode(self.params, cache, tok)
@@ -107,13 +111,46 @@ class Engine:
                 "ms_per_step": dt / n_new * 1000.0}
 
 
+def _bucket_len(n: int, max_len: int) -> int:
+    """Next power of two ≥ n (floor 2), capped at max_len. Bucketing prompt
+    pads means `_prefill1` compiles once per bucket — at most
+    ⌈log2(max_len)⌉ shapes — instead of once per distinct prompt length."""
+    b = 2
+    while b < n:
+        b *= 2
+    return min(b, max_len)
+
+
+def _scatter_rows(pool: Dict, src: Dict, slots: jax.Array) -> Dict:
+    """One whole-pool update: row j of every `src` cache leaf lands in row
+    slots[j] of the pool (runs leaves carry a leading stacked-layer axis,
+    so batch is axis 1; `pos` is batch-leading). slots[j] >= pool batch
+    drops row j — admission pads with out-of-range slots."""
+    runs = jax.tree.map(
+        lambda pool_l, src_l: pool_l.at[:, slots].set(
+            src_l.astype(pool_l.dtype), mode="drop"),
+        pool["runs"], src["runs"])
+    pos = pool["pos"].at[slots].set(src["pos"], mode="drop")
+    return {"runs": runs, "pos": pos}
+
+
 class ContinuousBatcher:
     """Slot-based continuous batching on top of per-slot caches.
 
-    Every slot owns one row of a persistent batched cache. Prompts are
-    prefilled slot-by-slot (row-scattered into the pool); decode advances
-    all live slots each step. This is the deployment-shaped serving loop —
-    on a real cluster the prefill would run on a disaggregated prefill pod.
+    Every slot owns one row of a persistent batched cache; decode advances
+    all live slots each step. Admission is BATCHED: all waiting requests
+    that fit into free slots are prefilled together in one fixed-batch
+    call, with prompts right-padded to a power-of-two bucket (per-row
+    `lengths` keep ragged rows exact — padded cache slots are zeroed and
+    masked). The freshly built rows then land in the pool via a single
+    donated multi-row scatter. Retraces of the jitted prefill/decode/
+    scatter steps are counted in `stats` — the bucketing invariant
+    (≤ ⌈log2(max_len)⌉ prefill traces, 1 decode trace) is load-bearing for
+    serving latency and asserted in tests.
+
+    Architectures with recurrent state (ssm/lstm/enc-dec) can't right-pad
+    a prompt without corrupting the state, so they take the exact-length
+    admission path (one prefill trace per distinct prompt length).
     """
 
     def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig):
@@ -123,29 +160,89 @@ class ContinuousBatcher:
         self.tokens = jnp.zeros((scfg.batch, 1), dtype=jnp.int32)
         self.queue: List[Request] = []
         self.done: List[Request] = []
-        self._decode = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t))
-        self._prefill1 = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b, max_len=scfg.max_len))
+        kinds = {k for k, _ in cfg.layer_runs()}
+        self.bucketed = (kinds <= {"attn", "swa"}
+                         and not cfg.is_encoder_decoder)
+        self.stats: Dict[str, int] = {
+            "prefill_retraces": 0, "decode_retraces": 0,
+            "scatter_retraces": 0, "admissions": 0, "admitted": 0,
+        }
+
+        # trace-time side effects: the counters bump once per jit cache
+        # miss (tracing) and never during steady-state dispatch
+        def _decode_fn(p, c, t):
+            self.stats["decode_retraces"] += 1
+            return T.decode_step(p, cfg, c, t)
+
+        def _prefill_fn(p, b):
+            self.stats["prefill_retraces"] += 1
+            return T.prefill(p, cfg, b, max_len=scfg.max_len)
+
+        def _scatter_fn(pool, src, slots):
+            self.stats["scatter_retraces"] += 1
+            return _scatter_rows(pool, src, slots)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill1 = jax.jit(_prefill_fn)
+        self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> None:
-        for slot in range(self.scfg.batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            logits, c1 = self._prefill1(
-                self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
-            # scatter the single-row cache into this slot of the pool
-            self.cache = jax.tree.map(
-                lambda pool, single: _scatter_row(pool, single, slot),
-                self.cache, c1)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            req.out.append(int(tok[0]))
-            self.tokens = self.tokens.at[slot, 0].set(tok[0])
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        n = min(len(free), len(self.queue))
+        if not n:
+            return
+        admit, self.queue = self.queue[:n], self.queue[n:]
+        for req in admit:
+            # cache rows hold prompt + generated tokens: an over-long
+            # prompt keeps its newest max_len-1 tokens (degrade, not crash)
+            keep = self.scfg.max_len - 1
+            if len(req.tokens) > keep:
+                req.tokens = req.tokens[-keep:]
+        if self.bucketed:
+            self._admit_batched(admit, free[:n])
+        else:
+            for req, slot in zip(admit, free):
+                self._admit_exact(req, slot)
+        self.stats["admissions"] += 1
+        self.stats["admitted"] += n
+
+    def _admit_batched(self, admit: List[Request], free: List[int]) -> None:
+        """All admitted prompts in ONE fixed-batch bucketed prefill."""
+        B = self.scfg.batch
+        Sb = _bucket_len(max(len(r.tokens) for r in admit),
+                         self.scfg.max_len)
+        toks = np.zeros((B, Sb), dtype=np.int32)
+        lens = np.ones((B,), dtype=np.int32)
+        slots = np.full((B,), B, dtype=np.int32)       # B = dropped row
+        for j, (req, slot) in enumerate(zip(admit, free)):
+            toks[j, :len(req.tokens)] = req.tokens
+            lens[j] = len(req.tokens)
+            slots[j] = slot
+        logits, c1 = self._prefill1(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray(lens)})
+        self.cache = self._scatter(self.cache, c1, jnp.asarray(slots))
+        tok = np.asarray(jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+        self.tokens = self.tokens.at[jnp.asarray(slots), 0].set(
+            jnp.asarray(tok), mode="drop")
+        for j, (req, slot) in enumerate(zip(admit, free)):
+            req.out.append(int(tok[j]))
             self.slots[slot] = req
+
+    def _admit_exact(self, req: Request, slot: int) -> None:
+        """Exact-length single-row admission (recurrent-state archs)."""
+        logits, c1 = self._prefill1(
+            self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
+        self.cache = self._scatter(self.cache, c1,
+                                   jnp.asarray([slot], dtype=np.int32))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        req.out.append(int(tok[0]))
+        self.tokens = self.tokens.at[slot, 0].set(tok[0])
+        self.slots[slot] = req
 
     def step(self) -> int:
         """One engine iteration: admit + one decode step for all live slots.
@@ -173,23 +270,3 @@ class ContinuousBatcher:
                 break
             self.step()
         return self.done
-
-
-def _scatter_row(pool, single, slot: int):
-    """Insert a batch-1 cache subtree into row `slot` of the pooled cache.
-    Handles leading stacked-layer dims: the batch axis is the one where
-    pool.shape differs from single.shape."""
-    if not hasattr(pool, "shape") or pool.ndim == 0:
-        return pool
-    for ax in range(pool.ndim):
-        if ax < single.ndim and pool.shape[ax] != single.shape[ax] \
-                and single.shape[ax] == 1:
-            idx = [slice(None)] * pool.ndim
-            idx[ax] = slot
-            src = jnp.squeeze(single, axis=ax)
-            return pool.at[tuple(idx)].set(src.astype(pool.dtype))
-    # slot-pool of size 1: shapes coincide; row 0 is the only slot
-    if pool.shape == single.shape and pool.shape and pool.shape[0] == 1 \
-            and slot == 0:
-        return single.astype(pool.dtype)
-    return pool

@@ -1,0 +1,236 @@
+"""Decode fast path: ragged Pallas decode-attention kernel parity, the
+decode-shaped low-rank GEMV, bucketed batched admission in the
+ContinuousBatcher (bounded retraces, identical outputs), and the
+measure_decode_throughput warmup fixes."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models import transformer as T
+from repro.models.params import set_use_pallas
+from repro.serve.engine import (ContinuousBatcher, Engine, Request,
+                                ServeConfig)
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode-attention kernel parity (interpret mode) vs the jnp oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,hd,L,window,cap", [
+    (2, 4, 2, 16, 32, 0, 0.0),     # GQA, full cache
+    (3, 4, 4, 32, 24, 0, 0.0),     # MHA, ragged cache length (pads)
+    (2, 4, 1, 16, 64, 0, 0.0),     # MQA
+    (2, 4, 2, 16, 8, 8, 0.0),      # GQA, ring buffer
+    (2, 6, 2, 16, 8, 8, 30.0),     # ring + logit softcap
+    (1, 2, 2, 64, 512, 0, 0.0),    # long cache, short lengths (block skip)
+])
+def test_decode_attention_parity(B, H, KV, hd, L, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rnd(ks[0], (B, H, hd), dtype)
+    k = rnd(ks[1], (B, L, KV, hd), dtype)
+    v = rnd(ks[2], (B, L, KV, hd), dtype)
+    span = window if window else L
+    # ragged lengths: cover 1, mid, and the full span across the batch
+    lengths = jnp.asarray(
+        [1 + (i * (span - 1)) // max(B - 1, 1) for i in range(B)],
+        dtype=jnp.int32) if B > 1 else jnp.asarray([span], dtype=jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, window=window, softcap=cap)
+    r = ref.decode_attention(q, k, v, lengths, window=window, softcap=cap)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                - r.astype(jnp.float32))))
+    assert err <= 1e-2, err
+
+
+def test_decode_attention_ring_wraparound():
+    """Ring lengths far past the window: every slot live, ages wrap."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, KV, hd, w = 2, 4, 2, 16, 8
+    q = rnd(ks[0], (B, H, hd))
+    k = rnd(ks[1], (B, w, KV, hd))
+    v = rnd(ks[2], (B, w, KV, hd))
+    lengths = jnp.asarray([3 * w + 5, 7 * w + 1], dtype=jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, window=w)
+    r = ref.decode_attention(q, k, v, lengths, window=w)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-4
+
+
+def test_attend_decode_pallas_matches_jnp():
+    """End-to-end decode step: kernel path == jnp path, full + ring archs."""
+    for arch in ("llama-mini", "gemma3-12b"):
+        cfg = get_config(arch).reduced()
+        params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        _, cache = T.prefill(params, cfg, {"tokens": toks}, max_len=20)
+        nxt = toks[:, -1:]
+        l0, _ = T.decode_step(params, cfg, cache, nxt)
+        set_use_pallas(True)
+        try:
+            l1, _ = T.decode_step(params, cfg, cache, nxt)
+        finally:
+            set_use_pallas(False)
+        err = float(jnp.max(jnp.abs(l0 - l1)))
+        assert err < 2e-3, (arch, err)
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped low-rank GEMV
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,R,N", [
+    (1, 256, 16, 256),      # single decode token
+    (8, 200, 24, 300),      # ragged K/N (128-aligned padding)
+    (33, 512, 8, 1024),     # odd batch
+    (64, 1024, 128, 640),   # dispatch boundary (largest GEMV shape)
+    (65, 256, 16, 256),     # just past the boundary -> tiled kernel
+])
+def test_lowrank_gemv_parity(M, K, R, N):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = rnd(ks[0], (M, K))
+    B = rnd(ks[1], (K, R)) * 0.1
+    C = rnd(ks[2], (R, N)) * 0.1
+    y = ops.lowrank_matmul(x, B, C)
+    yr = ref.lowrank_matmul(x, B, C)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-6
+    assert err / scale < 2e-5, (err, scale)
+
+
+def test_lowrank_gemv_grads_still_flow():
+    """The shape dispatch lives inside custom_vjp fwd; grads stay exact."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = rnd(ks[0], (4, 64))
+    B = rnd(ks[1], (64, 8)) * 0.2
+    C = rnd(ks[2], (8, 32)) * 0.2
+    g1 = jax.grad(lambda *a: jnp.sum(ops.lowrank_matmul(*a) ** 2),
+                  argnums=(0, 1, 2))(x, B, C)
+    g2 = jax.grad(lambda x, B, C: jnp.sum(((x @ B) @ C) ** 2),
+                  argnums=(0, 1, 2))(x, B, C)
+    for a, b in zip(g1, g2):
+        assert jnp.allclose(a, b, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ragged non-causal flash stays on the kernel path
+# ---------------------------------------------------------------------------
+def test_flash_ragged_bidirectional_kernel_path(monkeypatch):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rnd(ks[0], (1, 60, 2, 32))
+    k = rnd(ks[1], (1, 60, 2, 32))
+    v = rnd(ks[2], (1, 60, 2, 32))
+
+    def boom(*a, **kw):    # the old silent fallback must be gone
+        raise AssertionError("ragged bidirectional fell back to reference")
+    monkeypatch.setattr(ref, "flash_attention", boom)
+    o = ops.flash_attention(q, k, v, False, 0, 0.0)
+    monkeypatch.undo()
+    r = ref.flash_attention(q, k, v, causal=False)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatcher: bucketed batched admission
+# ---------------------------------------------------------------------------
+CFG = get_config("llama-mini").replace(n_layers=2, d_model=64, n_heads=4,
+                                       n_kv_heads=2, head_dim=16, d_ff=128,
+                                       vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def mini_params():
+    params, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    return params
+
+
+def _mixed_requests(n, seed=0, max_prompt=21):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(
+                        0, CFG.vocab_size,
+                        size=(int(rng.integers(1, max_prompt)),),
+                        dtype=np.int32),
+                    n_new=4) for i in range(n)]
+
+
+def test_batcher_bucketed_matches_sequential(mini_params):
+    scfg = ServeConfig(batch=3, max_len=64, temperature=0.0)
+    cb = ContinuousBatcher(mini_params, CFG, scfg)
+    assert cb.bucketed
+    reqs = _mixed_requests(7, seed=1)
+    for r in reqs:
+        cb.submit(r)
+    done = cb.run_until_drained()
+    assert len(done) == 7
+    eng = Engine(mini_params, CFG, ServeConfig(temperature=0.0))
+    for r in done:
+        want = eng.generate(r.tokens[None, :], n_new=r.n_new)[0]
+        assert (np.asarray(r.out) == want).all(), (r.rid, r.out, want)
+
+
+def test_batcher_retrace_bound(mini_params):
+    """Arbitrary mixed-length workloads compile _prefill1 at most
+    ceil(log2(max_len)) times and decode exactly once."""
+    scfg = ServeConfig(batch=4, max_len=64, temperature=0.0)
+    cb = ContinuousBatcher(mini_params, CFG, scfg)
+    # staggered submits across many drain cycles: lengths 1..40 hit every
+    # bucket repeatedly, admission batch sizes vary
+    lens = list(range(1, 41))
+    rng = np.random.default_rng(2)
+    rng.shuffle(lens)
+    for i, L in enumerate(lens):
+        cb.submit(Request(
+            rid=i, tokens=rng.integers(0, CFG.vocab_size, size=(L,),
+                                       dtype=np.int32), n_new=2))
+        if i % 5 == 4:
+            cb.step()
+    done = cb.run_until_drained()
+    assert len(done) == len(lens)
+    bound = math.ceil(math.log2(scfg.max_len))
+    assert cb.stats["prefill_retraces"] <= bound, cb.stats
+    assert cb.stats["decode_retraces"] == 1, cb.stats
+    assert cb.stats["admitted"] == len(lens)
+
+
+def test_batcher_exact_path_for_stateful_archs():
+    cfg = get_config("xlstm-350m").reduced()
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch=2, max_len=32, temperature=0.0)
+    cb = ContinuousBatcher(params, cfg, scfg)
+    assert not cb.bucketed     # recurrent state: no right-padding
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        cb.submit(Request(rid=i,
+                          tokens=rng.integers(0, cfg.vocab_size, size=(4 + i,),
+                                              dtype=np.int32),
+                          n_new=3))
+    done = cb.run_until_drained()
+    assert len(done) == 3
+    eng = Engine(params, cfg, ServeConfig(temperature=0.0))
+    for r in done:
+        want = eng.generate(r.tokens[None, :], n_new=3)[0]
+        assert (np.asarray(r.out) == want).all(), (r.rid, r.out, want)
+
+
+# ---------------------------------------------------------------------------
+# throughput meter warmup fixes
+# ---------------------------------------------------------------------------
+def test_throughput_meter_zero_warmup(mini_params):
+    eng = Engine(mini_params, CFG, ServeConfig())
+    m = eng.measure_decode_throughput(batch=2, prompt_len=8, n_new=3,
+                                      warmup=0)
+    assert m["tokens_per_s"] > 0
+
+
+def test_throughput_meter_warmup_advances(mini_params):
+    eng = Engine(mini_params, CFG, ServeConfig())
+    m = eng.measure_decode_throughput(batch=2, prompt_len=8, n_new=3,
+                                      warmup=2)
+    assert m["tokens_per_s"] > 0
