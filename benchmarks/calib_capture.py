@@ -1,0 +1,176 @@
+"""Calibration-capture throughput: eager-host oracle vs jit/device
+streaming capture (the PR-2 tentpole; DESIGN.md §6).
+
+Three execution paths per grid cell:
+  eager-host        the fp64 numpy Collector — forward runs op-by-op with a
+                    host round trip per tagged linear (the seed behavior)
+  jit-device        StreamingCalibrator — one jit-compiled step per batch,
+                    fp32 Gram partials reduced on device (XLA dot on this
+                    CPU runner; Pallas ``gram_blocked`` on TPU), fp64 host
+                    flush every few batches
+  pallas-interpret  the smallest cell again with the Pallas gram kernel
+                    under the interpreter: CORRECTNESS evidence that the
+                    TPU deploy path runs end to end (timing is not a perf
+                    claim)
+
+Every streaming row also records ``max_rel_err`` against the eager fp64
+oracle — the acceptance bar is 1e-4 on every tag and is asserted here, so
+the CI smoke run (scripts/ci.sh) re-proves parity on every push.
+
+Emits ``BENCH_calib.json`` at the repo root with the schema
+``{bench, config, tokens_per_s, ms_per_batch}``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ROOT, cached, calib_batches
+from repro.configs import get_config
+from repro.core.capture import Collector, StreamingCalibrator, \
+    to_list_params
+from repro.core.compress import calibrate
+from repro.models import transformer as T
+
+BENCH_JSON = os.path.join(ROOT, "BENCH_calib.json")
+
+GRID = {"batch": 8, "seq": 128, "n_batches": 8}
+SMOKE_GRID = {"batch": 2, "seq": 32, "n_batches": 3}
+PARITY_TOL = 1e-4
+
+
+def _eager_capture(lp, cfg, batches) -> Collector:
+    return calibrate(lp, cfg, batches, streaming=False)
+
+
+def _max_rel_err(col: Collector, oracle: Collector) -> float:
+    worst = 0.0
+    for tag in oracle.gram:
+        ref = oracle.gram[tag]
+        got = col.gram[tag]
+        worst = max(worst, float(np.abs(got - ref).max()
+                                 / (np.abs(ref).max() + 1e-12)))
+        aref = oracle.absmean[tag]
+        worst = max(worst, float(np.abs(col.absmean[tag] - aref).max()
+                                 / (np.abs(aref).max() + 1e-12)))
+    return worst
+
+
+def run(force: bool = False, smoke: bool = False):
+    name = "calib_capture" + ("_smoke" if smoke else "")
+    grid = SMOKE_GRID if smoke else GRID
+
+    def compute():
+        cfg = get_config("llama-mini")
+        if smoke:
+            cfg = cfg.reduced()
+        params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        lp = to_list_params(params, cfg)
+        batches = calib_batches(cfg, n_samples=grid["batch"]
+                                * grid["n_batches"], batch=grid["batch"],
+                                seq_len=grid["seq"])
+        tokens = grid["batch"] * grid["seq"] * grid["n_batches"]
+        rows = []
+
+        def row(path, dt, extra=None):
+            r = {"bench": "calib_capture",
+                 "config": {"path": path, **grid},
+                 "tokens_per_s": tokens / dt,
+                 "ms_per_batch": dt / grid["n_batches"] * 1000.0}
+            r.update(extra or {})
+            rows.append(r)
+            print(f"  calib {path:16s}: {r['tokens_per_s']:8.0f} tok/s "
+                  f"({r['ms_per_batch']:.0f} ms/batch)", flush=True)
+            return r
+
+        # -- eager host oracle (also the parity reference) ------------------
+        t0 = time.perf_counter()
+        oracle = _eager_capture(lp, cfg, batches)
+        row("eager-host", time.perf_counter() - t0)
+
+        # -- jit/device streaming ------------------------------------------
+        # pass 1 (untimed) pays the compile and covers every batch exactly
+        # once — the finalized stats feed the parity bar vs the oracle
+        cal = StreamingCalibrator(lp, cfg)
+        for b in batches:
+            cal.ingest(b)
+        err = _max_rel_err(cal.finalize(), oracle)
+        assert err < PARITY_TOL, f"streaming capture diverged: {err:.2e}"
+        # pass 2 (timed): finalize reset the device accumulators, so
+        # re-ingesting is steady-state; the smoke cell is ~4 ms/batch, so
+        # repeat the batch list enough to widen the timing window well
+        # past scheduler noise (the CI gate diffs this number)
+        rounds = 25 if smoke else 2
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                cal.ingest(b)
+        cal.sync()
+        dt = time.perf_counter() - t0
+        n_timed = grid["n_batches"] * rounds
+        r = {"bench": "calib_capture",
+             "config": {"path": "jit-device", **grid},
+             "tokens_per_s": grid["batch"] * grid["seq"] * n_timed / dt,
+             "ms_per_batch": dt / n_timed * 1000.0, "max_rel_err": err}
+        rows.append(r)
+        print(f"  calib {'jit-device':16s}: {r['tokens_per_s']:8.0f} tok/s "
+              f"({r['ms_per_batch']:.0f} ms/batch, rel err {err:.1e}, "
+              f"timed {n_timed} batches)", flush=True)
+
+        # -- Pallas gram kernel, interpret mode (deploy-path evidence) ------
+        pal = StreamingCalibrator(lp, cfg, use_kernel=True, flush_every=1)
+        t0 = time.perf_counter()
+        pal.ingest(batches[0])
+        pal.sync()
+        dt1 = time.perf_counter() - t0
+        one = _eager_capture(lp, cfg, batches[:1])
+        err = _max_rel_err(pal.finalize(), one)
+        assert err < PARITY_TOL, f"pallas gram diverged: {err:.2e}"
+        r = {"bench": "calib_capture",
+             "config": {"path": "pallas-interpret", "batch": grid["batch"],
+                        "seq": grid["seq"], "n_batches": 1},
+             "tokens_per_s": grid["batch"] * grid["seq"] / dt1,
+             "ms_per_batch": dt1 * 1000.0, "max_rel_err": err}
+        rows.append(r)
+        print(f"  calib pallas-interpret: ok (rel err {err:.1e})",
+              flush=True)
+        return {"rows": rows}
+
+    out = cached(name, compute, force)
+    write_bench_json(out["rows"])
+    return out
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> str:
+    payload = [{"bench": r["bench"], "config": r["config"],
+                "tokens_per_s": r["tokens_per_s"],
+                "ms_per_batch": r["ms_per_batch"],
+                **({"max_rel_err": r["max_rel_err"]}
+                   if "max_rel_err" in r else {})} for r in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + grid (CI)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(force=args.force, smoke=args.smoke)
+    for r in out["rows"]:
+        c = r["config"]
+        print(f"  {c['path']:16s} b={c['batch']} s={c['seq']} "
+              f"n={c['n_batches']} {r['tokens_per_s']:8.0f} tok/s")
+    print(f"  wrote {BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,6 @@ import numpy as np
 from repro.ckpt import store
 from repro.configs import get_config
 from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
-from repro.models import transformer as T
 from repro.train import step as TS
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN = os.path.join(ROOT, "experiments", "dryrun")

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import sys
 import traceback
 
 
@@ -29,9 +28,10 @@ def main(argv=None) -> int:
                          "to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig3_lora, fig4_decode_path, fig4_throughput,
-                            table1_effective_rank, table2_gqa, table3_ppl,
-                            table5_beta, table8_calib)
+    from benchmarks import (calib_capture, fig3_lora, fig4_decode_path,
+                            fig4_throughput, table1_effective_rank,
+                            table2_gqa, table3_ppl, table5_beta,
+                            table8_calib)
 
     def d_table3(out):
         rows = {(r["method"], r.get("ratio")): r["ppl"]
@@ -84,7 +84,13 @@ def main(argv=None) -> int:
                    if r["config"]["model"] != "dense" and cell(r) in dense)
         return f"decode_speedup={best:.2f}x"
 
+    def d_calib(out):
+        by = {r["config"]["path"]: r["tokens_per_s"] for r in out["rows"]}
+        ratio = by["jit-device"] / max(by["eager-host"], 1e-9)
+        return f"stream_speedup={ratio:.0f}x"
+
     fig4_decode = functools.partial(fig4_decode_path.run, smoke=args.smoke)
+    calib = functools.partial(calib_capture.run, smoke=args.smoke)
 
     benches = [
         ("table1_effective_rank", table1_effective_rank.run, d_table1),
@@ -94,6 +100,7 @@ def main(argv=None) -> int:
         ("table8_calib", table8_calib.run, d_table8),
         ("fig4_throughput", fig4_throughput.run, d_fig4),
         ("fig4_decode_path", fig4_decode, d_fig4d),
+        ("calib_capture", calib, d_calib),
         ("fig3_lora", fig3_lora.run, d_fig3),
     ]
     if args.skip_slow:
@@ -110,7 +117,9 @@ def main(argv=None) -> int:
             us = out.get("_wall_s", 0.0) * 1e6
             print(f"{name},{us:.0f},{derive(out)}", flush=True)
             json_rows += [r for r in out.get("rows", [])
-                          if "tokens_per_s" in r and "bench" in r]
+                          if "tokens_per_s" in r and "bench" in r
+                          and "ms_per_step" in r]   # decode-path schema
+
         except Exception as e:
             rc = 1
             traceback.print_exc()

@@ -1,10 +1,15 @@
 """Compress-then-serve: the deployment story. Loads (or quickly trains) a
-model, applies D-Rank at 30%, and serves a batch of requests through the
-continuous-batching engine — comparing dense vs compressed decode
+model, applies D-Rank at 30% (calibration Grams captured by the jit/device
+streaming path), persists the compressed artifact, boots a SECOND engine
+straight from the checkpoint (no re-compression) and checks it decodes
+token-identically — then serves a batch of requests through the
+continuous-batching engine, comparing dense vs compressed decode
 throughput (paper Fig. 4's phenomenon).
 
     PYTHONPATH=src python examples/compress_and_serve.py
 """
+import shutil
+import tempfile
 import time
 
 import jax
@@ -45,14 +50,26 @@ def main():
     print(f"compressed: {plan.summary['achieved_ratio']:.1%} of "
           f"compressible params removed")
 
+    # persist + boot from the artifact: the deploy path never re-compresses
+    ckpt_dir = tempfile.mkdtemp(prefix="drank_ckpt_")
+    CC.save_plan(ckpt_dir, comp, plan, cfg)
+    eng_ckpt = Engine.from_compressed(ckpt_dir, cfg, ServeConfig())
+    prompts = np.arange(24, dtype=np.int32).reshape(4, 6) % cfg.vocab_size
+    same = (Engine(comp, cfg, ServeConfig()).generate(prompts, 16)
+            == eng_ckpt.generate(prompts, 16)).all()
+    print(f"checkpoint round-trip: saved to {ckpt_dir}, booted engine "
+          f"decodes token-identical: {bool(same)}")
+    assert same
+
     for name, p in (("dense", params), ("drank-30%", comp)):
         eng = Engine(p, cfg, ServeConfig())
         m = eng.measure_decode_throughput(batch=4, prompt_len=16, n_new=32)
         print(f"  {name:10s}: {m['tokens_per_s']:7.0f} tok/s "
               f"({m['ms_per_step']:.1f} ms/decode-step)")
 
-    print("== continuous batching, 6 requests on 3 slots ==")
-    cb = ContinuousBatcher(comp, cfg, ServeConfig(batch=3, max_len=96))
+    print("== continuous batching, 6 requests on 3 slots (ckpt boot) ==")
+    cb = ContinuousBatcher.from_compressed(
+        ckpt_dir, cfg, ServeConfig(batch=3, max_len=96))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(6):
@@ -63,6 +80,7 @@ def main():
     dt = time.perf_counter() - t0
     print(f"  served {len(done)} requests, "
           f"{sum(len(r.out) for r in done)} tokens in {dt:.1f}s")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

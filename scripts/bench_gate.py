@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Bench regression gate: diff a freshly emitted BENCH_*.json against its
+committed smoke baseline and fail on a throughput regression.
+
+    python scripts/bench_gate.py BENCH_decode.json \
+        benchmarks/baselines/BENCH_decode.smoke.json --threshold 0.25
+
+Rows are matched by their full ``config`` dict. ``pallas-interpret`` rows
+are skipped — interpreter wall-times are correctness evidence, not a perf
+claim (DESIGN.md §3). Baselines were recorded on the repo's 1-core CI
+container; the threshold is deliberately loose (25%) to absorb
+machine-to-machine variance, and ``--update`` refreshes a baseline in
+place after an intentional perf change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+METRIC = "tokens_per_s"
+
+
+def _key(row):
+    return json.dumps(row["config"], sort_keys=True)
+
+
+def _skip(row) -> bool:
+    return "interpret" in str(row["config"].get("path", ""))
+
+
+def gate(current_path: str, baseline_path: str, threshold: float) -> int:
+    with open(current_path) as f:
+        current = {_key(r): r for r in json.load(f)}
+    with open(baseline_path) as f:
+        baseline = [r for r in json.load(f) if not _skip(r)]
+    if not baseline:
+        print(f"bench_gate: {baseline_path} has no gateable rows")
+        return 1
+    failures = []
+    for ref in baseline:
+        k = _key(ref)
+        if k not in current:
+            failures.append(f"  missing row {k}")
+            continue
+        got = current[k][METRIC]
+        want = ref[METRIC]
+        drop = 1.0 - got / want if want > 0 else 0.0
+        status = "FAIL" if drop > threshold else "ok"
+        print(f"  [{status}] {k}: {got:.0f} vs baseline {want:.0f} "
+              f"({-drop:+.1%})")
+        if drop > threshold:
+            failures.append(
+                f"  {k}: {METRIC} {got:.0f} < {want:.0f} "
+                f"(-{drop:.1%} > allowed {threshold:.0%})")
+    if failures:
+        print(f"bench_gate: REGRESSION vs {baseline_path}:")
+        print("\n".join(failures))
+        return 1
+    print(f"bench_gate: ok ({len(baseline)} rows within {threshold:.0%} "
+          f"of {baseline_path})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max fractional tokens_per_s drop (default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current over the baseline instead of gating")
+    args = ap.parse_args(argv)
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"bench_gate: baseline {args.baseline} updated")
+        return 0
+    return gate(args.current, args.baseline, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,7 +22,7 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -128,6 +128,105 @@ def restore(ckpt_dir: str, template, step: Optional[int] = None,
         else:
             leaves.append(arr)
     return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Template-free pytree artifacts (compressed-checkpoint serving)
+# ---------------------------------------------------------------------------
+# ``save``/``restore`` above need a same-structure template on load — fine
+# for TrainState, impossible for a D-Rank compressed model, whose list-form
+# tree (per-layer ranks differ) only exists AFTER compression. These
+# functions persist the structure itself: the manifest records nested dict
+# keys / list lengths / leaf dtypes, and leaves that are the same array
+# object (cross-layer shared bases B) are stored once and re-aliased on
+# load, so the artifact stays as small as the deduped param count.
+
+def _encode_pytree(tree):
+    arrays: Dict[str, np.ndarray] = {}
+    seen: Dict[int, str] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {"kind": "dict",
+                    "items": {k: walk(v, path + (str(k),))
+                              for k, v in node.items()}}
+        if isinstance(node, (list, tuple)):
+            return {"kind": "list" if isinstance(node, list) else "tuple",
+                    "items": [walk(v, path + (str(i),))
+                              for i, v in enumerate(node)]}
+        if not hasattr(node, "shape"):
+            raise TypeError(f"non-array leaf at {'/'.join(path)}: "
+                            f"{type(node).__name__}")
+        key = _SEP.join(path)
+        spec = {"kind": "leaf", "key": key, "dtype": str(node.dtype)}
+        if id(node) in seen:
+            spec["alias"] = seen[id(node)]
+            return spec
+        seen[id(node)] = key
+        arr = np.asarray(jax.device_get(node))
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)     # npz-safe; manifest keeps dtype
+        arrays[key] = arr
+        return spec
+
+    return walk(tree, ()), arrays
+
+
+def save_pytree(ckpt_dir: str, tree, meta: Optional[Dict] = None,
+                name: str = "pytree") -> str:
+    """Atomic template-free save of an arbitrary dict/list pytree of arrays
+    to ``<ckpt_dir>/<name>/``. Returns the artifact path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, name)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_{name}_")
+    try:
+        structure, arrays = _encode_pytree(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "format": "pytree_v1",
+            "time": time.time(),
+            "structure": structure,
+            "meta": meta or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_pytree(ckpt_dir: str, name: str = "pytree") -> Tuple[Any, Dict]:
+    """Inverse of ``save_pytree``: returns ``(tree, meta)``. Aliased leaves
+    come back as the SAME jax array object (shared-basis dedup survives
+    the round trip)."""
+    path = os.path.join(ckpt_dir, name)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != "pytree_v1":
+        raise ValueError(f"{path}: not a pytree_v1 artifact")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    cache: Dict[str, jax.Array] = {}
+
+    def build(spec):
+        kind = spec["kind"]
+        if kind == "dict":
+            return {k: build(v) for k, v in spec["items"].items()}
+        if kind in ("list", "tuple"):
+            seq = [build(v) for v in spec["items"]]
+            return seq if kind == "list" else tuple(seq)
+        key = spec.get("alias", spec["key"])
+        if key not in cache:
+            if key not in arrays:
+                raise KeyError(f"artifact missing array {key}")
+            cache[key] = jax.numpy.asarray(arrays[key]).astype(spec["dtype"])
+        return cache[key]
+
+    return build(manifest["structure"]), manifest["meta"]
 
 
 class AsyncCheckpointer:

@@ -3,6 +3,9 @@ capture (calibration Grams) -> numerics (whitened SVD, effective rank) ->
 groups (cross-layer grouping policies) -> allocate (Lagrange closed form,
 beta rebalance, integerization; beyond-paper energy water-filling) ->
 compress (driver + the five baselines)."""
+from repro.core.capture import (StreamingCalibrator,  # noqa: F401
+                                streaming_calibrate)
 from repro.core.compress import (CompressionConfig, METHODS, Plan,  # noqa
-                                 build_plan_and_params, calibrate)
+                                 build_plan_and_params, calibrate,
+                                 load_plan, save_plan)
 from repro.core.numerics import effective_rank  # noqa: F401

@@ -8,8 +8,21 @@ matrix S in fp64) plus the mean-|X| vector (ASVD's scaling).
 Mechanism: model parameters are converted to *list form* (stacked layer runs
 → per-layer trees; see ``transformer._run_layers``), every linear's param
 dict gets a ``"_tag"`` string key, and ``apply_linear`` reports ``(tag, x)``
-to the active Collector while the calibration batches run eagerly (capture
-is a host-side side effect — never enable it under jit).
+to the active capture target (``repro.models.params.set_capture``). Two
+targets exist:
+
+  Collector        eager/host oracle — numpy fp64 accumulation, forward runs
+                   op-by-op (never under jit; it raises on tracers).
+  StreamingTape +  device-side streaming mode — the forward pass is traced
+  StreamingCalibrator  inside a jit'd step function, every tagged activation
+                   is reduced to a fp32 partial Gram ON DEVICE (Pallas
+                   ``gram_blocked`` on TPU, XLA dot elsewhere), partials are
+                   threaded functionally through donated accumulators, and
+                   the host flushes them into fp64 sums every few batches
+                   (DESIGN.md §6: fp32 partials + fp64 host-sum keep the
+                   paper's fp64 S-matrix while calibration runs compiled
+                   and multi-device; on a mesh, per-shard partials are
+                   psum'd inside ``shard_map``).
 
 MoE routed experts are captured separately: the dispatch buffers
 ``(E, capacity, d)`` that feed the per-expert GEMMs are reported by
@@ -18,19 +31,20 @@ exact zeros and contribute nothing to the Gram).
 """
 from __future__ import annotations
 
-import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.dist.sharding import P, shard_map
 from repro.models.params import Params, set_capture
 
 
 class Collector:
-    """Accumulates XᵀX (fp64) and Σ|x| per tag."""
+    """Accumulates XᵀX (fp64) and Σ|x| per tag. Eager/host only — this is
+    the precision oracle the streaming path is validated against."""
 
     def __init__(self):
         self.gram: Dict[str, np.ndarray] = {}
@@ -38,6 +52,11 @@ class Collector:
         self.count: Dict[str, int] = {}
 
     def add(self, tag: str, x: jax.Array) -> None:
+        if isinstance(x, jax.core.Tracer):
+            raise RuntimeError(
+                "Collector is host-side/eager and cannot run under jit; "
+                "use StreamingCalibrator / streaming_calibrate for the "
+                "device-side capture path")
         x2 = np.asarray(x, dtype=np.float64).reshape(-1, x.shape[-1])
         g = x2.T @ x2
         if tag in self.gram:
@@ -65,6 +84,217 @@ class Collector:
     def __exit__(self, *exc):
         set_capture(None)
         return False
+
+
+# ---------------------------------------------------------------------------
+# Streaming (jit/device) capture
+# ---------------------------------------------------------------------------
+class StreamingTape:
+    """Trace-time capture target: collects per-tag fp32 partial statistics
+    as jax values while a jit'd forward pass is being traced. The traced
+    computation therefore CONTAINS the Gram reductions; the surrounding
+    step function folds ``partials`` into the carried accumulators, so the
+    side effect is confined to trace time and the result is functional."""
+
+    def __init__(self, use_kernel: Optional[bool] = None):
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.use_kernel = use_kernel
+        self.partials: Dict[str, Dict[str, jax.Array]] = {}
+
+    def _gram(self, x2: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            return kops.gram(x2)
+        return jax.lax.dot_general(x2, x2, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    def add(self, tag: str, x: jax.Array) -> None:
+        x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+        part = {
+            "gram": self._gram(x2),
+            "absx": jnp.abs(x2).sum(0),
+            "count": jnp.full((), x2.shape[0], dtype=jnp.int32),
+        }
+        if tag in self.partials:
+            self.partials[tag] = jax.tree.map(jnp.add, self.partials[tag],
+                                              part)
+        else:
+            self.partials[tag] = part
+
+    def add_expert_batch(self, tag: str, xs: jax.Array) -> None:
+        for e in range(xs.shape[0]):
+            self.add(f"{tag}/expert{e}", xs[e])
+
+    def __enter__(self):
+        set_capture(self)
+        return self
+
+    def __exit__(self, *exc):
+        set_capture(None)
+        return False
+
+
+def _zero_accs(dims: Dict[str, int]) -> Dict[str, Dict[str, jax.Array]]:
+    return {tag: {"gram": jnp.zeros((d, d), jnp.float32),
+                  "absx": jnp.zeros((d,), jnp.float32),
+                  "count": jnp.zeros((), jnp.int32)}
+            for tag, d in dims.items()}
+
+
+class _ShapeProbe:
+    """Abstract capture target for tag/dim discovery under eval_shape."""
+
+    def __init__(self):
+        self.dims: Dict[str, int] = {}
+
+    def add(self, tag: str, x) -> None:
+        self.dims[tag] = int(x.shape[-1])
+
+    def add_expert_batch(self, tag: str, xs) -> None:
+        for e in range(xs.shape[0]):
+            self.dims[f"{tag}/expert{e}"] = int(xs.shape[-1])
+
+
+def discover_capture_dims(tagged: Params, cfg: ModelConfig,
+                          batch: Dict) -> Dict[str, int]:
+    """Enumerate every capture tag and its feature dim without running the
+    model (abstract eval of one forward pass)."""
+    from repro.models import transformer as T
+    probe = _ShapeProbe()
+    set_capture(probe)
+    try:
+        jax.eval_shape(lambda b: T.forward(tagged, cfg, b), batch)
+    finally:
+        set_capture(None)
+    return probe.dims
+
+
+class StreamingCalibrator:
+    """Jit-compiled, device-side calibration capture (DESIGN.md §6).
+
+    One jit'd step per batch shape: forward pass + on-device fp32 Gram
+    partials per tag, folded into donated accumulators. Every
+    ``flush_every`` batches the fp32 accumulators are pulled to host,
+    added into fp64 sums and reset — bounding fp32 accumulation error
+    while keeping the per-batch path free of host transfers.
+
+    With ``mesh``, the per-batch partials are computed per data-parallel
+    shard inside ``shard_map`` (batch rows split over ``data_axes``,
+    params closed over and replicated) and combined with ``lax.psum``;
+    the host then sees one replicated partial per batch, identical in
+    layout to the single-device path.
+    """
+
+    def __init__(self, list_params: Params, cfg: ModelConfig, *,
+                 mesh=None, data_axes=("pod", "data"),
+                 flush_every: int = 8, use_kernel: Optional[bool] = None):
+        self.cfg = cfg
+        self.tagged = tag_linears(list_params)
+        self.mesh = mesh
+        self.flush_every = max(1, flush_every)
+        self.use_kernel = use_kernel
+        self._dims: Optional[Dict[str, int]] = None
+        self._accs = None
+        self._step = None
+        self._since_flush = 0
+        self._host: Dict[str, Dict[str, np.ndarray]] = {}
+        if mesh is not None:
+            axes = tuple(a for a in data_axes if a in mesh.axis_names)
+            if not axes:
+                raise ValueError(
+                    f"mesh axes {mesh.axis_names} share nothing with "
+                    f"data_axes {data_axes}")
+            self.data_axes = axes
+        else:
+            self.data_axes = ()
+
+    # -- step construction --------------------------------------------------
+    def _tape_partials(self, batch):
+        from repro.models import transformer as T
+        tape = StreamingTape(self.use_kernel)
+        with tape:
+            T.forward(self.tagged, self.cfg, batch)
+        return tape.partials
+
+    def _build_step(self):
+        if self.mesh is None:
+            def step(accs, batch):
+                parts = self._tape_partials(batch)
+                return jax.tree.map(jnp.add, accs, parts)
+            return jax.jit(step, donate_argnums=0)
+
+        axes = self.data_axes
+
+        def shard_body(batch):
+            parts = self._tape_partials(batch)
+            return jax.tree.map(lambda a: jax.lax.psum(a, axes), parts)
+
+        sm = shard_map(shard_body, mesh=self.mesh,
+                       in_specs=(P(axes),), out_specs=P())
+
+        def step(accs, batch):
+            return jax.tree.map(jnp.add, accs, sm(batch))
+        return jax.jit(step, donate_argnums=0)
+
+    # -- ingest / flush / finalize -----------------------------------------
+    def ingest(self, batch: Dict) -> None:
+        """Fold one calibration batch into the device accumulators."""
+        if self._accs is None:
+            self._dims = discover_capture_dims(self.tagged, self.cfg, batch)
+            self._accs = _zero_accs(self._dims)
+            self._step = self._build_step()
+        self._accs = self._step(self._accs, batch)
+        self._since_flush += 1
+        if self._since_flush >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        """Pull fp32 device partials to host, fold into fp64, reset."""
+        if self._accs is None or self._since_flush == 0:
+            return
+        host = jax.device_get(self._accs)
+        for tag, acc in host.items():
+            g = np.asarray(acc["gram"], dtype=np.float64)
+            a = np.asarray(acc["absx"], dtype=np.float64)
+            n = int(acc["count"])
+            if tag in self._host:
+                self._host[tag]["gram"] += g
+                self._host[tag]["absx"] += a
+                self._host[tag]["count"] += n
+            else:
+                self._host[tag] = {"gram": g, "absx": a, "count": n}
+        self._accs = _zero_accs(self._dims)
+        self._since_flush = 0
+
+    def sync(self) -> None:
+        """Block until in-flight device work is done (benchmarking)."""
+        if self._accs is not None:
+            jax.block_until_ready(self._accs)
+
+    def finalize(self) -> Collector:
+        """Return the fp64 host-side statistics as a Collector (drop-in for
+        the compression driver)."""
+        self.flush()
+        col = Collector()
+        for tag, acc in self._host.items():
+            col.gram[tag] = acc["gram"]
+            col.absmean[tag] = acc["absx"]
+            col.count[tag] = acc["count"]
+        return col
+
+
+def streaming_calibrate(list_params: Params, cfg: ModelConfig,
+                        batches: Iterable[Dict], *, mesh=None,
+                        flush_every: int = 8,
+                        use_kernel: Optional[bool] = None) -> Collector:
+    """Run the device-side streaming capture over ``batches`` and return the
+    finalized fp64 Collector."""
+    cal = StreamingCalibrator(list_params, cfg, mesh=mesh,
+                              flush_every=flush_every, use_kernel=use_kernel)
+    for batch in batches:
+        cal.ingest(batch)
+    return cal.finalize()
 
 
 # ---------------------------------------------------------------------------

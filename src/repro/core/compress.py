@@ -20,7 +20,7 @@ import copy
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +29,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import allocate as alloc
 from repro.core import numerics as num
-from repro.core.capture import (Collector, strip_tags, tag_linears,
-                                to_list_params)
+from repro.core.capture import (Collector, streaming_calibrate, strip_tags,
+                                tag_linears, to_list_params)
 from repro.core.groups import (BETA_MAP, Group, MatrixRef, build_groups,
                                enumerate_matrices)
 from repro.models import transformer as T
@@ -59,8 +59,17 @@ class CompressionConfig:
 # Calibration passes
 # ---------------------------------------------------------------------------
 def calibrate(list_params: Params, cfg: ModelConfig,
-              batches: Iterable[Dict]) -> Collector:
-    """Run forward passes eagerly with capture enabled; returns Grams."""
+              batches: Iterable[Dict], *, streaming: bool = True,
+              mesh=None) -> Collector:
+    """Collect per-tag Gram statistics over the calibration batches.
+
+    ``streaming=True`` (default) runs the jit-compiled device-side capture
+    (fp32 partials on device, fp64 host finalization; shard-aware when a
+    ``mesh`` is given — see ``capture.StreamingCalibrator``). The eager
+    host path (``streaming=False``) is the fp64 oracle it is validated
+    against (tests/test_calib_capture.py) and needs no compile step."""
+    if streaming:
+        return streaming_calibrate(list_params, cfg, batches, mesh=mesh)
     tagged = tag_linears(list_params)
     col = Collector()
     with col:
@@ -188,15 +197,19 @@ def build_plan_and_params(
         params: Params, cfg: ModelConfig, ccfg: CompressionConfig,
         calib_batches: Sequence[Dict],
         collector: Optional[Collector] = None,
+        streaming: bool = True,
 ) -> Tuple[Params, Plan]:
-    """Compress. Returns (list-form compressed params, plan)."""
+    """Compress. Returns (list-form compressed params, plan).
+
+    ``streaming`` selects the capture path when no ``collector`` is
+    supplied (see ``calibrate``)."""
     assert ccfg.method in METHODS, ccfg.method
     lp = to_list_params(params, cfg)
 
     needs_col = ccfg.method != "svd" or ccfg.refine
     col = collector
     if col is None and needs_col:
-        col = calibrate(lp, cfg, calib_batches)
+        col = calibrate(lp, cfg, calib_batches, streaming=streaming)
     fisher = (fisher_rows(lp, cfg, calib_batches)
               if ccfg.method == "fwsvd" else None)
 
@@ -299,20 +312,21 @@ def build_plan_and_params(
     plan = Plan(config=ccfg, groups=results, summary=summary)
     if ccfg.refine:
         new_lp = refine_coefficients(lp, new_lp, cfg, groups, ks, svds,
-                                     calib_batches)
+                                     calib_batches, streaming=streaming)
     return new_lp, plan
 
 
 def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
                         groups: List[Group], ks: Dict[str, int], svds: Dict,
-                        calib_batches: Sequence[Dict]) -> Params:
+                        calib_batches: Sequence[Dict],
+                        streaming: bool = True) -> Params:
     """Closed-form downstream update (the paper's ≥40% trick, after
     SVD-LLM): re-collect Grams THROUGH the compressed model (inputs now
     deviate from the originals) and re-solve each coefficient matrix
 
         C_i* = argmin_C ‖X_new (W_i − B C)‖_F = (Bᵀ G B)⁻¹ Bᵀ G W_i .
     """
-    col2 = calibrate(comp_lp, cfg, calib_batches)
+    col2 = calibrate(comp_lp, cfg, calib_batches, streaming=streaming)
     for g in groups:
         for i, m in enumerate(g.members):
             if m.expert is not None or m.tag not in col2.gram:
@@ -327,6 +341,47 @@ def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
             C = np.linalg.solve(BtGB, B.T @ G @ W)
             node["C"] = jnp.asarray(C, dtype=node["C"].dtype)
     return comp_lp
+
+
+# ---------------------------------------------------------------------------
+# Compressed-checkpoint round trip (deploy artifact)
+# ---------------------------------------------------------------------------
+ARTIFACT_NAME = "compressed"
+
+
+def _model_fingerprint(cfg: ModelConfig) -> Dict:
+    return {"name": cfg.name, "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model, "vocab_size": cfg.vocab_size,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads}
+
+
+def save_plan(ckpt_dir: str, list_params: Params, plan: Plan,
+              cfg: Optional[ModelConfig] = None) -> str:
+    """Persist the factorized list-form params + allocation plan so serving
+    can boot WITHOUT re-running compression. Shared group bases are stored
+    once (``store.save_pytree`` aliases identical leaves)."""
+    from repro.ckpt import store
+    meta: Dict = {"plan": json.loads(plan.to_json())}
+    if cfg is not None:
+        meta["model"] = _model_fingerprint(cfg)
+    return store.save_pytree(ckpt_dir, strip_tags(list_params), meta,
+                             name=ARTIFACT_NAME)
+
+
+def load_plan(ckpt_dir: str, cfg: Optional[ModelConfig] = None
+              ) -> Tuple[Params, Plan]:
+    """Load a compressed artifact saved by ``save_plan``. If ``cfg`` is
+    given, its fingerprint must match the one recorded at save time."""
+    from repro.ckpt import store
+    params, meta = store.load_pytree(ckpt_dir, name=ARTIFACT_NAME)
+    plan = Plan.from_json(json.dumps(meta["plan"]))
+    if cfg is not None and "model" in meta:
+        want = _model_fingerprint(cfg)
+        if want != meta["model"]:
+            raise ValueError(
+                f"compressed checkpoint was built for {meta['model']}, "
+                f"got config {want}")
+    return params, plan
 
 
 def compressed_param_count(list_params: Params) -> int:

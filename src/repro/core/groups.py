@@ -17,10 +17,9 @@ Grouping policy (paper §3.1/§3.4):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.params import Params

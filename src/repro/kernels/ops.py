@@ -9,7 +9,6 @@ the jnp reference formulation; forward-path fusion is the deploy win).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +52,6 @@ def lowrank_matmul(x: jax.Array, B: jax.Array, C: jax.Array) -> jax.Array:
 
 def _lowrank_fwd_impl(x, B, C):
     *lead, K = x.shape
-    R = B.shape[-1]
     N = C.shape[-1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]

@@ -3,7 +3,6 @@ asserted allclose against these across shape/dtype sweeps (tests/test_kernels.py
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,12 +22,11 @@ Results are cached as JSON under experiments/dryrun/<mesh>/<cell>.json; use
 --force to re-run. benchmarks/roofline.py consumes the JSONs.
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
 import traceback
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,15 @@
 """Serving launcher: load a checkpoint (optionally D-Rank-compress it on
-the fly), start the continuous-batching engine, run a synthetic request
-workload, and report latency/throughput.
+the fly, or boot straight from a saved compressed artifact), start the
+continuous-batching engine, run a synthetic request workload, and report
+latency/throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
         --ckpt runs/mini_mha --compress drank --ratio 0.3 \
-        --requests 16 --n-new 32
+        --save-compressed runs/mini_drank30 --requests 16 --n-new 32
+
+    # later: serve the artifact directly (no calibration/SVD at boot)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
+        --compressed-ckpt runs/mini_drank30 --requests 16 --n-new 32
 """
 from __future__ import annotations
 
@@ -26,6 +31,14 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio", type=float, default=0.3)
     ap.add_argument("--group-size", type=int, default=2)
     ap.add_argument("--beta", type=float, default=0.3)
+    ap.add_argument("--compressed-ckpt", default="",
+                    help="boot from a compress.save_plan artifact "
+                         "(skips --ckpt/--compress)")
+    ap.add_argument("--save-compressed", default="",
+                    help="after --compress, persist the artifact here")
+    ap.add_argument("--eager-capture", action="store_true",
+                    help="calibrate with the eager host oracle instead of "
+                         "the jit/device streaming capture")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -43,30 +56,42 @@ def main(argv=None) -> int:
     from repro.train import step as TS
 
     cfg = get_config(args.arch)
-    if args.ckpt:
-        state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
-        step, state = store.restore(args.ckpt, state)
-        params = state.params
-        print(f"loaded {args.ckpt} @ step {step}")
-    else:
-        params, _ = T.init_model(cfg, jax.random.PRNGKey(args.seed))
-        print("serving a randomly initialized model (no --ckpt)")
-
-    if args.compress:
-        import jax.numpy as jnp
-        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
-                          global_batch=8)
-        calib = [{"tokens": jnp.asarray(b["tokens"])}
-                 for b in calibration_batches(dcfg, 16, 8)]
-        ccfg = CC.CompressionConfig(method=args.compress, ratio=args.ratio,
-                                    group_size=args.group_size,
-                                    beta=args.beta)
-        params, plan = CC.build_plan_and_params(params, cfg, ccfg, calib)
-        print(f"compressed with {args.compress}: "
-              f"{plan.summary['achieved_ratio']:.1%} removed")
-
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
-    cb = ContinuousBatcher(params, cfg, scfg)
+    if args.compressed_ckpt:
+        cb = ContinuousBatcher.from_compressed(args.compressed_ckpt, cfg,
+                                               scfg)
+        print(f"booted from compressed checkpoint {args.compressed_ckpt} "
+              f"({cb.plan.summary['achieved_ratio']:.1%} removed, "
+              f"method={cb.plan.config.method})")
+    else:
+        if args.ckpt:
+            state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
+            step, state = store.restore(args.ckpt, state)
+            params = state.params
+            print(f"loaded {args.ckpt} @ step {step}")
+        else:
+            params, _ = T.init_model(cfg, jax.random.PRNGKey(args.seed))
+            print("serving a randomly initialized model (no --ckpt)")
+
+        if args.compress:
+            import jax.numpy as jnp
+            dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                              global_batch=8)
+            calib = [{"tokens": jnp.asarray(b["tokens"])}
+                     for b in calibration_batches(dcfg, 16, 8)]
+            ccfg = CC.CompressionConfig(method=args.compress,
+                                        ratio=args.ratio,
+                                        group_size=args.group_size,
+                                        beta=args.beta)
+            params, plan = CC.build_plan_and_params(
+                params, cfg, ccfg, calib,
+                streaming=not args.eager_capture)
+            print(f"compressed with {args.compress}: "
+                  f"{plan.summary['achieved_ratio']:.1%} removed")
+            if args.save_compressed:
+                path = CC.save_plan(args.save_compressed, params, plan, cfg)
+                print(f"saved compressed artifact to {path}")
+        cb = ContinuousBatcher(params, cfg, scfg)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.requests):

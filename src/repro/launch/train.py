@@ -12,12 +12,10 @@ shardings — see repro/launch/dryrun.py for the lowering proof.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import sys
 
-import jax
 
 
 def main(argv=None) -> int:

@@ -19,7 +19,7 @@ combination. Sliding-window attention on most layers, global on
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ so the same layer serves train and serve.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -26,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, MoEConfig
-from repro.dist.sharding import constrain, current_mesh
+from repro.dist.sharding import constrain, current_mesh, shard_map
 from repro.models.params import Builder, apply_linear, get_capture
 
 
@@ -219,7 +218,7 @@ def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.A
             # tokens are replicated over 'model'; average the aux statistic
             return out.reshape(xx.shape), aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body, mesh=mesh,
             in_specs=(rt, ew_specs, in_spec),
             out_specs=(in_spec, P()),

@@ -35,9 +35,11 @@ def use_pallas() -> bool:
     return getattr(_KERNEL_STATE, "use", False)
 
 
-# Calibration capture: when enabled (eager mode only), every apply_linear on
-# a param dict carrying a "_tag" key reports its input activations to the
-# active collector (repro.core.capture.Collector).
+# Calibration capture: when enabled, every apply_linear on a param dict
+# carrying a "_tag" key reports its input activations to the active capture
+# target (repro.core.capture): either the eager host Collector, or a
+# StreamingTape recording device-side fp32 Gram partials while a jit'd
+# calibration step is being traced.
 _CAPTURE = threading.local()
 
 

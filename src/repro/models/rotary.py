@@ -2,7 +2,7 @@
 absolute positions (seamless enc-dec)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -191,7 +191,6 @@ def apply_slstm(p: Dict, cfg: ModelConfig, x: jax.Array,
     """Full-sequence sLSTM (sequential lax.scan over time)."""
     B, S, d = x.shape
     H = cfg.n_heads
-    hd = d // H
     pre = apply_linear(p["w_in"], x) + p["bias"]["b"].astype(x.dtype)
 
     def step(state, pre_t):

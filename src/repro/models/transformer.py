@@ -21,7 +21,7 @@ Batch dictionary convention (everything optional except one input):
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,6 @@ def _init_block(b: Builder, cfg: ModelConfig, kind: str, n: int,
 
 def init_model(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Params]:
     """Returns (params, specs) — parallel pytrees."""
-    import numpy as _np
     b = Builder(key, param_dtype=jnp.dtype(cfg.param_dtype))
     b.normal("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
              scale=1.0 / cfg.d_model ** 0.5)

@@ -5,9 +5,8 @@ train step can chain transforms; state is a plain pytree (checkpointable,
 shardable with the same logical specs as the params)."""
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,10 +47,23 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self.plan = None              # set when booted from a compressed ckpt
         self._decode = jax.jit(
             lambda p, c, t: T.decode_step(p, cfg, c, t))
         self._prefill_cache: Dict[int, object] = {}
         self.key = jax.random.PRNGKey(scfg.seed)
+
+    @classmethod
+    def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
+                        scfg: ServeConfig) -> "Engine":
+        """Boot directly from a ``compress.save_plan`` artifact — no
+        calibration or SVD at serve time; the factorized list-form params
+        drop straight into the model code."""
+        from repro.core import compress as CC
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg)
+        eng = cls(params, cfg, scfg)
+        eng.plan = plan
+        return eng
 
     # ---- batch generation (simple API, fixed same-length prompts) --------
     def generate(self, prompts: np.ndarray, n_new: int,
@@ -153,8 +166,20 @@ class ContinuousBatcher:
     admission path (one prefill trace per distinct prompt length).
     """
 
+    @classmethod
+    def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
+                        scfg: ServeConfig) -> "ContinuousBatcher":
+        """Boot the batcher from a saved compressed checkpoint (see
+        ``Engine.from_compressed``)."""
+        from repro.core import compress as CC
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg)
+        cb = cls(params, cfg, scfg)
+        cb.plan = plan
+        return cb
+
     def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig):
         self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.plan = None
         self.cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.slots: List[Optional[Request]] = [None] * scfg.batch
         self.tokens = jnp.zeros((scfg.batch, 1), dtype=jnp.int32)

@@ -17,12 +17,11 @@ from __future__ import annotations
 import os
 import signal
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import store
 from repro.config import ModelConfig

@@ -7,8 +7,7 @@ serves dense, factorized, and adapted weights. Only adapter leaves get
 gradients (the base tree is closed over, not differentiated)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import transformer as T
 from repro.models.params import Params
-from repro.optim.adamw import (AdamWState, OptimizerConfig, adamw_init,
+from repro.optim.adamw import (OptimizerConfig, adamw_init,
                                adamw_update)
 
 _LORA_TARGETS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}

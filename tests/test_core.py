@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.core import allocate as alloc
 from repro.core import numerics as num
 from repro.core import compress as CC
-from repro.core.capture import to_list_params
 from repro.configs import get_config
 from repro.models import transformer as T
 
@@ -187,6 +186,7 @@ def mini_setup():
     return cfg, params, batches
 
 
+@pytest.mark.slow           # heaviest sweep: 6 full compression pipelines
 @pytest.mark.parametrize("method", ["svd", "asvd", "svdllm", "basis",
                                     "drank", "dranke"])
 def test_methods_hit_target_ratio(mini_setup, method):
@@ -248,6 +248,7 @@ def test_plan_roundtrip(mini_setup):
     assert [g.gid for g in plan2.groups] == [g.gid for g in plan.groups]
 
 
+@pytest.mark.slow           # MoE sweep: per-expert capture + grouped SVDs
 def test_moe_expert_compression():
     cfg = get_config("granite-moe-1b-a400m").reduced()
     params, _ = T.init_model(cfg, jax.random.PRNGKey(0))

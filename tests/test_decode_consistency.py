@@ -43,6 +43,7 @@ def test_prefill_decode_matches_forward(arch, rng):
     assert err < 2e-3, err
 
 
+@pytest.mark.slow           # ~80s: longest single test (3× window decode)
 def test_decode_window_wraparound(rng):
     """Sliding-window ring cache stays exact long past the window size."""
     cfg = get_config("gemma3-12b").reduced()

@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import numpy as np
 import pytest
 

@@ -2,7 +2,6 @@
 allclose against the pure-jnp oracles in repro/kernels/ref.py."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.kernels import ops, ref

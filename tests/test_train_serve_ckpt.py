@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.ckpt import store
-from repro.data.synthetic import (DataConfig, ShardedLoader, SyntheticLM,
+from repro.data.synthetic import (DataConfig, ShardedLoader,
                                   calibration_batches)
 from repro.models import transformer as T
 from repro.optim import powersgd as PS
