@@ -1,0 +1,219 @@
+"""Compression-math throughput: host fp64 loop vs batched jit/device
+backend vs randomized SVD (the PR-3 tentpole; DESIGN.md §1.5).
+
+The decomposition stage — Cholesky whitening, whitened SVD, truncation,
+refine solve — was the dominant remaining wall-clock of the compression
+pipeline once calibration capture moved on device (PR 2). This bench
+times that exact math over synthetic group buckets shaped like the
+at-scale regimes:
+
+  wide    (d1 << n·d2): shared-basis gate/up groups and fused MoE
+          experts — the host fp64 rectangular SVD pays O(d1²·nd2) with a
+          LAPACK fp64 constant, while the device path pays the same
+          large-dim work as fp32 GEMMs plus one (d1)² eigh. This is the
+          headline cell: ``jit-device`` must be ≥10× ``host-eager``.
+  square  (d1 ~ n·d2): the exact device path is eigh-bound here, which
+          is what the ``randomized`` range-finder row is for — top-k
+          factors from GEMMs + a (k+p)² eigh only.
+
+Paths per cell:
+  host-eager     core.numerics: per-matrix fp64 cholesky_whitener +
+                 whitened_svd + truncate_factors + refine solve (the
+                 production host path, unchanged since the seed)
+  jit-device     core.numerics_jax.decompose + refine_solve, one batched
+                 call per bucket, fp32 (exact: full spectrum)
+  randomized     same, rsvd=1 (square cell only)
+
+Every device row records ``max_rel_err`` of the rank-k reconstruction
+B·C against the host fp64 oracle (bar: 1e-3) plus ``speedup`` vs the
+cell's host row. Timing is best-of-N on both sides — this container's
+scheduler noise is well above the effect size (bench_gate compensates
+with a loose threshold, but the recorded baseline should be the real
+capability, not a noise draw).
+
+The throughput metric is the tokens/s-equivalent for compression math:
+``params_per_s`` = dense parameters decomposed per second
+(groups · d1 · n·d2 / wall). Emits ``BENCH_compress.json`` with schema
+``{bench, config, params_per_s, ms_per_group}``; gated by
+``scripts/bench_gate.py --metric params_per_s``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ROOT, cached
+from repro.core import numerics as num
+from repro.core import numerics_jax as numj
+
+BENCH_JSON = os.path.join(ROOT, "BENCH_compress.json")
+
+# (cell, d1, nd2, groups, k, paths)
+GRID = [
+    ("wide", 448, 8192, 3, 224, ("host-eager", "jit-device")),
+    ("square", 512, 1024, 4, 64, ("host-eager", "jit-device",
+                                  "randomized")),
+]
+SMOKE_GRID = [
+    ("wide", 448, 8192, 3, 224, ("host-eager", "jit-device")),
+    ("square", 512, 1024, 2, 64, ("jit-device", "randomized")),
+]
+PARITY_TOL = 1e-3
+HOST_REPS, DEV_REPS = 3, 5
+
+
+def _make_cell(rng, d1, nd2, b):
+    W = rng.normal(size=(b, d1, nd2))
+    G = np.stack([(lambda X: X.T @ X)(rng.normal(size=(2 * d1, d1)))
+                  for _ in range(b)])
+    G2 = np.stack([(lambda X: X.T @ X)(rng.normal(size=(2 * d1, d1)))
+                   for _ in range(b)])
+    return W, G, G2
+
+
+def _host_pipeline(W, G, G2, k):
+    """The production host path, per matrix: whiten, SVD, truncate,
+    refine solve against the second Gram."""
+    outs = []
+    for i in range(W.shape[0]):
+        wh = num.cholesky_whitener(G[i])
+        U, s, Vt = num.whitened_svd(W[i], wh)
+        B, C = num.truncate_factors(U, s, Vt, k, wh)
+        BtGB = B.T @ G2[i] @ B
+        BtGB += 1e-8 * np.trace(BtGB) / max(1, k) * np.eye(k)
+        C2 = np.linalg.solve(BtGB, B.T @ G2[i] @ W[i])
+        outs.append((B, C, C2))
+    return outs
+
+
+def _device_pipeline(Wj, Gj, G2j, k, rsvd):
+    import jax
+    sig, B, C = numj.decompose(Wj, gram=Gj, k=k, rsvd=rsvd)
+    C2 = numj.refine_solve(B, G2j, Wj)
+    return jax.block_until_ready((sig, B, C, C2))
+
+
+def _best_of(fn, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(force: bool = False, smoke: bool = False):
+    name = "compress_path" + ("_smoke" if smoke else "")
+    grid = SMOKE_GRID if smoke else GRID
+
+    def compute():
+        rng = np.random.default_rng(0)
+        rows = []
+        for cell, d1, nd2, b, k, paths in grid:
+            W, G, G2 = _make_cell(rng, d1, nd2, b)
+            dense = b * d1 * nd2
+            Wj = jnp.asarray(W, dtype=jnp.float32)
+            Gj = jnp.asarray(G, dtype=jnp.float32)
+            G2j = jnp.asarray(G2, dtype=jnp.float32)
+            # fp64 oracle factors for the parity bar (untimed; one matrix
+            # is enough — every batch member runs the same compiled code)
+            wh = num.cholesky_whitener(G[0])
+            U, s, Vt = num.whitened_svd(W[0], wh)
+            B0, C0 = num.truncate_factors(U, s, Vt, k, wh)
+            R0 = B0 @ C0
+            host_pps = None
+
+            def row(path, dt, err=None):
+                nonlocal host_pps
+                r = {"bench": "compress_path",
+                     "config": {"path": path, "cell": cell, "d1": d1,
+                                "nd2": nd2, "groups": b, "k": k},
+                     "params_per_s": dense / dt,
+                     "ms_per_group": dt / b * 1000.0}
+                if err is not None:
+                    r["max_rel_err"] = err
+                if path == "host-eager":
+                    host_pps = r["params_per_s"]
+                elif host_pps is not None:
+                    r["speedup"] = r["params_per_s"] / host_pps
+                rows.append(r)
+                extra = "".join(
+                    [f" rel err {err:.1e}" if err is not None else "",
+                     f" {r.get('speedup', 0):.1f}x" if "speedup" in r
+                     else ""])
+                print(f"  compress {cell:7s} {path:12s}: "
+                      f"{r['params_per_s']:.3g} params/s "
+                      f"({r['ms_per_group']:.0f} ms/group{extra})",
+                      flush=True)
+
+            if "host-eager" in paths:
+                dt, _ = _best_of(lambda: _host_pipeline(W, G, G2, k),
+                                 HOST_REPS)
+                row("host-eager", dt)
+            exact_err = None
+            for path, rsvd in (("jit-device", 0), ("randomized", 1)):
+                if path not in paths:
+                    continue
+                _device_pipeline(Wj, Gj, G2j, k, rsvd)     # compile
+                dt, out = _best_of(
+                    lambda: _device_pipeline(Wj, Gj, G2j, k, rsvd),
+                    DEV_REPS)
+                R1 = (np.asarray(out[1][0], dtype=np.float64)
+                      @ np.asarray(out[2][0], dtype=np.float64))
+                # exact path: elementwise parity vs the fp64 oracle.
+                # randomized: its subspace is approximate by design, so
+                # compare whitened reconstruction ERROR against exact's
+                if rsvd == 0:
+                    err = float(np.abs(R1 - R0).max() / np.abs(R0).max())
+                    exact_err = np.linalg.norm(wh.apply(W[0] - R1))
+                    assert err < PARITY_TOL, \
+                        f"device factors diverged: {err:.2e}"
+                else:
+                    e_rs = np.linalg.norm(wh.apply(W[0] - R1))
+                    ref = exact_err if exact_err is not None else \
+                        np.linalg.norm(wh.apply(W[0] - R0))
+                    err = float(e_rs / max(ref, 1e-12) - 1.0)
+                    assert err < 0.10, \
+                        f"rsvd reconstruction off by {err:.1%} vs exact"
+                row(path, dt, err)
+        return {"rows": rows}
+
+    out = cached(name, compute, force)
+    write_bench_json(out["rows"])
+    return out
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> str:
+    payload = [{"bench": r["bench"], "config": r["config"],
+                "params_per_s": r["params_per_s"],
+                "ms_per_group": r["ms_per_group"],
+                **{kk: r[kk] for kk in ("max_rel_err", "speedup")
+                   if kk in r}} for r in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller grid (CI)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(force=args.force, smoke=args.smoke)
+    for r in out["rows"]:
+        c = r["config"]
+        print(f"  {c['cell']:7s} {c['path']:12s} d1={c['d1']} "
+              f"nd2={c['nd2']} g={c['groups']} k={c['k']} "
+              f"{r['params_per_s']:.3g} params/s")
+    print(f"  wrote {BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -34,8 +34,12 @@ from repro.serve.engine import Engine, ServeConfig
 BENCH_JSON = os.path.join(ROOT, "BENCH_decode.json")
 
 GRID = {"batch": (1, 4, 8), "cache_len": (128, 256, 512), "n_new": 16}
-SMOKE_GRID = {"batch": (2,), "cache_len": (32,), "n_new": 2}
+SMOKE_GRID = {"batch": (2,), "cache_len": (32,), "n_new": 8}
 RATIO = 0.5
+MEASURE_REPS = 3        # best-of-N: single sub-ms decode windows swing
+#                         ~2x under this container's scheduler noise and
+#                         flake the CI gate (compile is paid once per
+#                         Engine, so repeats only re-run the steps)
 
 
 def _variants(cfg, params, calib):
@@ -45,11 +49,17 @@ def _variants(cfg, params, calib):
     return {"dense": params, f"drank@{RATIO:.0%}": lp}
 
 
-def _measure(eng, batch, cache_len, n_new):
+def _measure(eng, batch, cache_len, n_new, reps: int = MEASURE_REPS):
     warmup = 1
     prompt_len = max(4, cache_len - n_new - warmup - 1)
-    return eng.measure_decode_throughput(batch=batch, prompt_len=prompt_len,
-                                         n_new=n_new, warmup=warmup)
+    best = None
+    for _ in range(reps):
+        m = eng.measure_decode_throughput(batch=batch,
+                                          prompt_len=prompt_len,
+                                          n_new=n_new, warmup=warmup)
+        if best is None or m["ms_per_step"] < best["ms_per_step"]:
+            best = m
+    return best
 
 
 def run(force: bool = False, smoke: bool = False):

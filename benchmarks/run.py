@@ -28,10 +28,10 @@ def main(argv=None) -> int:
                          "to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import (calib_capture, fig3_lora, fig4_decode_path,
-                            fig4_throughput, table1_effective_rank,
-                            table2_gqa, table3_ppl, table5_beta,
-                            table8_calib)
+    from benchmarks import (calib_capture, compress_path, fig3_lora,
+                            fig4_decode_path, fig4_throughput,
+                            table1_effective_rank, table2_gqa, table3_ppl,
+                            table5_beta, table8_calib)
 
     def d_table3(out):
         rows = {(r["method"], r.get("ratio")): r["ppl"]
@@ -89,8 +89,14 @@ def main(argv=None) -> int:
         ratio = by["jit-device"] / max(by["eager-host"], 1e-9)
         return f"stream_speedup={ratio:.0f}x"
 
+    def d_compress(out):
+        dev = max((r for r in out["rows"] if "speedup" in r),
+                  key=lambda r: r["speedup"])
+        return f"device_speedup={dev['speedup']:.1f}x"
+
     fig4_decode = functools.partial(fig4_decode_path.run, smoke=args.smoke)
     calib = functools.partial(calib_capture.run, smoke=args.smoke)
+    compress = functools.partial(compress_path.run, smoke=args.smoke)
 
     benches = [
         ("table1_effective_rank", table1_effective_rank.run, d_table1),
@@ -101,6 +107,7 @@ def main(argv=None) -> int:
         ("fig4_throughput", fig4_throughput.run, d_fig4),
         ("fig4_decode_path", fig4_decode, d_fig4d),
         ("calib_capture", calib, d_calib),
+        ("compress_path", compress, d_compress),
         ("fig3_lora", fig3_lora.run, d_fig3),
     ]
     if args.skip_slow:

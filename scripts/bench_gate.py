@@ -7,10 +7,14 @@ committed smoke baseline and fail on a throughput regression.
 
 Rows are matched by their full ``config`` dict. ``pallas-interpret`` rows
 are skipped — interpreter wall-times are correctness evidence, not a perf
-claim (DESIGN.md §3). Baselines were recorded on the repo's 1-core CI
-container; the threshold is deliberately loose (25%) to absorb
-machine-to-machine variance, and ``--update`` refreshes a baseline in
-place after an intentional perf change.
+claim (DESIGN.md §3). Baselines were recorded on the repo's CI container;
+the threshold is deliberately loose (25%) to absorb machine-to-machine
+variance, and ``--update`` refreshes a baseline in place after an
+intentional perf change.
+
+``--metric`` selects the throughput field: decode/calib benches gate
+``tokens_per_s``; the compression-math bench gates its tokens/s
+equivalent ``params_per_s`` (dense parameters decomposed per second).
 """
 from __future__ import annotations
 
@@ -18,8 +22,6 @@ import argparse
 import json
 import shutil
 import sys
-
-METRIC = "tokens_per_s"
 
 
 def _key(row):
@@ -30,7 +32,8 @@ def _skip(row) -> bool:
     return "interpret" in str(row["config"].get("path", ""))
 
 
-def gate(current_path: str, baseline_path: str, threshold: float) -> int:
+def gate(current_path: str, baseline_path: str, threshold: float,
+         metric: str = "tokens_per_s") -> int:
     with open(current_path) as f:
         current = {_key(r): r for r in json.load(f)}
     with open(baseline_path) as f:
@@ -44,15 +47,15 @@ def gate(current_path: str, baseline_path: str, threshold: float) -> int:
         if k not in current:
             failures.append(f"  missing row {k}")
             continue
-        got = current[k][METRIC]
-        want = ref[METRIC]
+        got = current[k][metric]
+        want = ref[metric]
         drop = 1.0 - got / want if want > 0 else 0.0
         status = "FAIL" if drop > threshold else "ok"
         print(f"  [{status}] {k}: {got:.0f} vs baseline {want:.0f} "
               f"({-drop:+.1%})")
         if drop > threshold:
             failures.append(
-                f"  {k}: {METRIC} {got:.0f} < {want:.0f} "
+                f"  {k}: {metric} {got:.0f} < {want:.0f} "
                 f"(-{drop:.1%} > allowed {threshold:.0%})")
     if failures:
         print(f"bench_gate: REGRESSION vs {baseline_path}:")
@@ -68,7 +71,10 @@ def main(argv=None) -> int:
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="max fractional tokens_per_s drop (default 0.25)")
+                    help="max fractional metric drop (default 0.25)")
+    ap.add_argument("--metric", default="tokens_per_s",
+                    help="throughput field to diff "
+                         "(default tokens_per_s)")
     ap.add_argument("--update", action="store_true",
                     help="copy current over the baseline instead of gating")
     args = ap.parse_args(argv)
@@ -76,7 +82,7 @@ def main(argv=None) -> int:
         shutil.copyfile(args.current, args.baseline)
         print(f"bench_gate: baseline {args.baseline} updated")
         return 0
-    return gate(args.current, args.baseline, args.threshold)
+    return gate(args.current, args.baseline, args.threshold, args.metric)
 
 
 if __name__ == "__main__":

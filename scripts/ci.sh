@@ -27,6 +27,9 @@ python -m benchmarks.fig4_decode_path --smoke --force
 echo "== calibration-capture benchmark smoke =="
 python -m benchmarks.calib_capture --smoke --force
 
+echo "== compression-math benchmark smoke =="
+python -m benchmarks.compress_path --smoke --force
+
 echo "== BENCH json schemas =="
 python - <<'EOF'
 import json
@@ -48,6 +51,28 @@ err = max(r.get("max_rel_err", 0.0) for r in rows)
 assert err < 1e-4, f"streaming capture parity broke: {err}"
 print(f"ok: BENCH_calib.json {len(rows)} rows, paths={sorted(paths)}, "
       f"max_rel_err={err:.1e}")
+
+rows = json.load(open("BENCH_compress.json"))
+assert rows, "no compress benchmark rows"
+for r in rows:
+    assert {"bench", "config", "params_per_s", "ms_per_group"} <= set(r), r
+paths = {r["config"]["path"] for r in rows}
+assert {"host-eager", "jit-device", "randomized"} <= paths, paths
+exact_err = max(r["max_rel_err"] for r in rows
+                if r["config"]["path"] == "jit-device")
+assert exact_err < 1e-3, f"device compression math diverged: {exact_err}"
+# the committed baseline records >=10x on a quiet runner; at CI time only
+# assert a loose floor so scheduler noise can't flake the lane — and only
+# when perf gating is on at all (BENCH_GATE=off covers exotic hardware)
+import os
+speedups = [r["speedup"] for r in rows
+            if r["config"]["path"] == "jit-device" and "speedup" in r]
+if os.environ.get("BENCH_GATE", "on") != "off":
+    assert speedups and max(speedups) >= 5.0, \
+        f"jit-device compression speedup collapsed: {speedups}"
+top = max(speedups) if speedups else float("nan")
+print(f"ok: BENCH_compress.json {len(rows)} rows, paths={sorted(paths)}, "
+      f"exact_err={exact_err:.1e}, speedup={top:.1f}x")
 EOF
 
 # Baselines are absolute tokens/s recorded on the repo's 1-core container;
@@ -60,6 +85,9 @@ if [ "${BENCH_GATE:-on}" != "off" ]; then
     benchmarks/baselines/BENCH_decode.smoke.json --threshold "$THRESH"
   python scripts/bench_gate.py BENCH_calib.json \
     benchmarks/baselines/BENCH_calib.smoke.json --threshold "$THRESH"
+  python scripts/bench_gate.py BENCH_compress.json \
+    benchmarks/baselines/BENCH_compress.smoke.json --threshold "$THRESH" \
+    --metric params_per_s
 else
   echo "== bench regression gate skipped (BENCH_GATE=off) =="
 fi

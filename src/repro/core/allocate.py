@@ -12,6 +12,7 @@ multiplier is re-solved on the rest.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Sequence
@@ -183,9 +184,6 @@ def energy_allocate(groups: Sequence[GroupSpec],
     greedy catastrophically breaks the model at 50%; see EXPERIMENTS.md
     §Claims). Beats the paper's R_eff/k proxy at 20–30% compression.
     """
-    import heapq
-    import numpy as np
-
     k = {g.gid: 0 for g in groups}
     spent = 0.0
     norm2 = {}

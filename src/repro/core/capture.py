@@ -50,6 +50,11 @@ class Collector:
         self.gram: Dict[str, np.ndarray] = {}
         self.absmean: Dict[str, np.ndarray] = {}
         self.count: Dict[str, int] = {}
+        # streaming-whitening factors: upper-triangular R with RᵀR ≈ G,
+        # for tags captured with StreamingCalibrator(whiten_tags=...) —
+        # those tags have no entry in ``gram`` (that is the point: the
+        # Gram never exists, on device or host)
+        self.chol: Dict[str, np.ndarray] = {}
 
     def add(self, tag: str, x: jax.Array) -> None:
         if isinstance(x, jax.core.Tracer):
@@ -96,11 +101,19 @@ class StreamingTape:
     step function folds ``partials`` into the carried accumulators, so the
     side effect is confined to trace time and the result is functional."""
 
-    def __init__(self, use_kernel: Optional[bool] = None):
+    def __init__(self, use_kernel: Optional[bool] = None,
+                 whiten=None):
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
         self.use_kernel = use_kernel
+        self.whiten = whiten            # True (all tags) or a set of tags
         self.partials: Dict[str, Dict[str, jax.Array]] = {}
+        # raw fp32 activation blocks for whitened tags (these feed a QR
+        # update instead of a Gram reduction; DESIGN.md §1.5)
+        self.xblocks: Dict[str, list] = {}
+
+    def _whitened(self, tag: str) -> bool:
+        return _tag_whitened(self.whiten, tag)
 
     def _gram(self, x2: jax.Array) -> jax.Array:
         if self.use_kernel:
@@ -112,10 +125,13 @@ class StreamingTape:
     def add(self, tag: str, x: jax.Array) -> None:
         x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
         part = {
-            "gram": self._gram(x2),
             "absx": jnp.abs(x2).sum(0),
             "count": jnp.full((), x2.shape[0], dtype=jnp.int32),
         }
+        if self._whitened(tag):
+            self.xblocks.setdefault(tag, []).append(x2)
+        else:
+            part["gram"] = self._gram(x2)
         if tag in self.partials:
             self.partials[tag] = jax.tree.map(jnp.add, self.partials[tag],
                                               part)
@@ -135,11 +151,22 @@ class StreamingTape:
         return False
 
 
-def _zero_accs(dims: Dict[str, int]) -> Dict[str, Dict[str, jax.Array]]:
-    return {tag: {"gram": jnp.zeros((d, d), jnp.float32),
-                  "absx": jnp.zeros((d,), jnp.float32),
-                  "count": jnp.zeros((), jnp.int32)}
-            for tag, d in dims.items()}
+def _tag_whitened(whiten, tag: str) -> bool:
+    """Shared predicate: ``whiten`` is True (all tags), a collection of
+    tags, or None/falsy (off)."""
+    return whiten is True or (whiten is not None and tag in whiten)
+
+
+def _zero_accs(dims: Dict[str, int], whiten=None
+               ) -> Dict[str, Dict[str, jax.Array]]:
+    def entry(tag, d):
+        stat = ({"chol": jnp.zeros((d, d), jnp.float32)}
+                if _tag_whitened(whiten, tag)
+                else {"gram": jnp.zeros((d, d), jnp.float32)})
+        return {**stat, "absx": jnp.zeros((d,), jnp.float32),
+                "count": jnp.zeros((), jnp.int32)}
+
+    return {tag: entry(tag, d) for tag, d in dims.items()}
 
 
 class _ShapeProbe:
@@ -184,16 +211,41 @@ class StreamingCalibrator:
     params closed over and replicated) and combined with ``lax.psum``;
     the host then sees one replicated partial per batch, identical in
     layout to the single-device path.
+
+    ``whiten_tags`` (True = every tag, or an explicit collection of tags)
+    enables STREAMING WHITENING for those tags: instead of accumulating a
+    Gram, the step function maintains the upper-triangular Cholesky factor
+    of the running Gram directly — ``R' = qr_r([R; X_batch])`` — as a
+    rank-revealing QR update on the raw fp32 activation rows. The Gram of
+    a whitened tag is never materialized, on device or host; ``finalize``
+    exposes the factor as ``Collector.chol[tag]`` and both the host
+    whitener (``numerics.whitener_from_factor``) and the device
+    decomposition (``numerics_jax.decompose(factor=...)``) consume it as
+    is. QR-updating also sidesteps fp32 Gram-summation error (orthogonal
+    transforms don't square the condition number), so no fp64 host flush
+    is needed for these tags. Not supported together with ``mesh``.
     """
 
     def __init__(self, list_params: Params, cfg: ModelConfig, *,
                  mesh=None, data_axes=("pod", "data"),
-                 flush_every: int = 8, use_kernel: Optional[bool] = None):
+                 flush_every: int = 8, use_kernel: Optional[bool] = None,
+                 whiten_tags=None):
         self.cfg = cfg
         self.tagged = tag_linears(list_params)
         self.mesh = mesh
         self.flush_every = max(1, flush_every)
         self.use_kernel = use_kernel
+        if whiten_tags is True:
+            self.whiten = True
+        elif whiten_tags:
+            self.whiten = frozenset(whiten_tags)
+        else:
+            self.whiten = None
+        if self.whiten is not None and mesh is not None:
+            raise ValueError(
+                "streaming whitening (whiten_tags) is host-mesh-exclusive "
+                "for now: QR updates do not commute with per-shard psum; "
+                "capture with mesh=None or whiten_tags=None")
         self._dims: Optional[Dict[str, int]] = None
         self._accs = None
         self._step = None
@@ -212,22 +264,34 @@ class StreamingCalibrator:
     # -- step construction --------------------------------------------------
     def _tape_partials(self, batch):
         from repro.models import transformer as T
-        tape = StreamingTape(self.use_kernel)
+        tape = StreamingTape(self.use_kernel, whiten=self.whiten)
         with tape:
             T.forward(self.tagged, self.cfg, batch)
-        return tape.partials
+        return tape.partials, tape.xblocks
 
     def _build_step(self):
         if self.mesh is None:
             def step(accs, batch):
-                parts = self._tape_partials(batch)
-                return jax.tree.map(jnp.add, accs, parts)
+                parts, xblocks = self._tape_partials(batch)
+                new = {}
+                for tag, acc in accs.items():
+                    p = parts[tag]
+                    e = {"absx": acc["absx"] + p["absx"],
+                         "count": acc["count"] + p["count"]}
+                    if "chol" in acc:
+                        stacked = jnp.concatenate(
+                            [acc["chol"], *xblocks[tag]], axis=0)
+                        e["chol"] = jnp.linalg.qr(stacked, mode="r")
+                    else:
+                        e["gram"] = acc["gram"] + p["gram"]
+                    new[tag] = e
+                return new
             return jax.jit(step, donate_argnums=0)
 
         axes = self.data_axes
 
         def shard_body(batch):
-            parts = self._tape_partials(batch)
+            parts, _ = self._tape_partials(batch)
             return jax.tree.map(lambda a: jax.lax.psum(a, axes), parts)
 
         sm = shard_map(shard_body, mesh=self.mesh,
@@ -242,7 +306,7 @@ class StreamingCalibrator:
         """Fold one calibration batch into the device accumulators."""
         if self._accs is None:
             self._dims = discover_capture_dims(self.tagged, self.cfg, batch)
-            self._accs = _zero_accs(self._dims)
+            self._accs = _zero_accs(self._dims, self.whiten)
             self._step = self._build_step()
         self._accs = self._step(self._accs, batch)
         self._since_flush += 1
@@ -250,21 +314,33 @@ class StreamingCalibrator:
             self.flush()
 
     def flush(self) -> None:
-        """Pull fp32 device partials to host, fold into fp64, reset."""
+        """Pull fp32 device partials to host, fold into fp64, reset.
+        Streaming-whitening factors stay resident on device (the QR chain
+        is self-stabilizing; there is nothing to flush into fp64)."""
         if self._accs is None or self._since_flush == 0:
             return
-        host = jax.device_get(self._accs)
+        host = jax.device_get({
+            tag: {k: v for k, v in acc.items() if k != "chol"}
+            for tag, acc in self._accs.items()})
         for tag, acc in host.items():
-            g = np.asarray(acc["gram"], dtype=np.float64)
             a = np.asarray(acc["absx"], dtype=np.float64)
             n = int(acc["count"])
             if tag in self._host:
-                self._host[tag]["gram"] += g
                 self._host[tag]["absx"] += a
                 self._host[tag]["count"] += n
             else:
-                self._host[tag] = {"gram": g, "absx": a, "count": n}
-        self._accs = _zero_accs(self._dims)
+                self._host[tag] = {"absx": a, "count": n}
+            if "gram" in acc:
+                g = np.asarray(acc["gram"], dtype=np.float64)
+                if "gram" in self._host[tag]:
+                    self._host[tag]["gram"] += g
+                else:
+                    self._host[tag]["gram"] = g
+        fresh = _zero_accs(self._dims, self.whiten)
+        for tag, acc in self._accs.items():
+            if "chol" in acc:
+                fresh[tag]["chol"] = acc["chol"]
+        self._accs = fresh
         self._since_flush = 0
 
     def sync(self) -> None:
@@ -274,24 +350,33 @@ class StreamingCalibrator:
 
     def finalize(self) -> Collector:
         """Return the fp64 host-side statistics as a Collector (drop-in for
-        the compression driver)."""
+        the compression driver). Whitened tags expose their running
+        Cholesky factor as ``col.chol[tag]`` and have no Gram entry."""
         self.flush()
         col = Collector()
         for tag, acc in self._host.items():
-            col.gram[tag] = acc["gram"]
+            if "gram" in acc:
+                col.gram[tag] = acc["gram"]
             col.absmean[tag] = acc["absx"]
             col.count[tag] = acc["count"]
+        if self._accs is not None:
+            for tag, acc in self._accs.items():
+                if "chol" in acc:
+                    col.chol[tag] = np.asarray(
+                        jax.device_get(acc["chol"]), dtype=np.float64)
         return col
 
 
 def streaming_calibrate(list_params: Params, cfg: ModelConfig,
                         batches: Iterable[Dict], *, mesh=None,
                         flush_every: int = 8,
-                        use_kernel: Optional[bool] = None) -> Collector:
+                        use_kernel: Optional[bool] = None,
+                        whiten_tags=None) -> Collector:
     """Run the device-side streaming capture over ``batches`` and return the
     finalized fp64 Collector."""
     cal = StreamingCalibrator(list_params, cfg, mesh=mesh,
-                              flush_every=flush_every, use_kernel=use_kernel)
+                              flush_every=flush_every, use_kernel=use_kernel,
+                              whiten_tags=whiten_tags)
     for batch in batches:
         cal.ingest(batch)
     return cal.finalize()

@@ -29,6 +29,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import allocate as alloc
 from repro.core import numerics as num
+from repro.core import numerics_jax as numj
 from repro.core.capture import (Collector, streaming_calibrate, strip_tags,
                                 tag_linears, to_list_params)
 from repro.core.groups import (BETA_MAP, Group, MatrixRef, build_groups,
@@ -53,6 +54,11 @@ class CompressionConfig:
     include_experts: bool = True    # compress routed MoE experts too
     refine: bool = False            # closed-form C update on compressed acts
     type_filter: Tuple[str, ...] = ()   # restrict to these types (tests)
+    # device path (numerics_jax): min-side size above which the exact
+    # batched eigh switches to the randomized range-finder; 0 = never
+    rsvd_threshold: int = 0
+    rsvd_oversample: int = 8
+    rsvd_iters: int = 2
 
 
 # ---------------------------------------------------------------------------
@@ -60,16 +66,19 @@ class CompressionConfig:
 # ---------------------------------------------------------------------------
 def calibrate(list_params: Params, cfg: ModelConfig,
               batches: Iterable[Dict], *, streaming: bool = True,
-              mesh=None) -> Collector:
+              mesh=None, whiten_tags=None) -> Collector:
     """Collect per-tag Gram statistics over the calibration batches.
 
     ``streaming=True`` (default) runs the jit-compiled device-side capture
     (fp32 partials on device, fp64 host finalization; shard-aware when a
     ``mesh`` is given — see ``capture.StreamingCalibrator``). The eager
     host path (``streaming=False``) is the fp64 oracle it is validated
-    against (tests/test_calib_capture.py) and needs no compile step."""
+    against (tests/test_calib_capture.py) and needs no compile step.
+    ``whiten_tags`` (streaming only) captures those tags as streaming
+    Cholesky factors instead of Grams."""
     if streaming:
-        return streaming_calibrate(list_params, cfg, batches, mesh=mesh)
+        return streaming_calibrate(list_params, cfg, batches, mesh=mesh,
+                                   whiten_tags=whiten_tags)
     tagged = tag_linears(list_params)
     col = Collector()
     with col:
@@ -165,11 +174,93 @@ def _get_node(tree, path):
     return node
 
 
-def _member_weight(lp: Params, ref: MatrixRef) -> np.ndarray:
+def _member_weight(lp: Params, ref: MatrixRef,
+                   dtype=np.float64) -> np.ndarray:
     node = _get_node(lp, ref.path)
     if ref.expert is not None:                   # stacked expert array
-        return np.asarray(node[ref.expert], dtype=np.float64)
-    return np.asarray(node["w"], dtype=np.float64)
+        return np.asarray(node[ref.expert]).astype(dtype)
+    return np.asarray(node["w"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Device decomposition (numerics_jax): bucket same-shaped groups, one
+# batched jit call per bucket
+# ---------------------------------------------------------------------------
+def _shard_group_batch(x: jax.Array, mesh):
+    """Optionally spread a stacked group batch over the mesh's data axes
+    (logical axis ``group_batch``; replicates when the batch does not
+    divide — see dist.sharding.shape_aware_spec)."""
+    if mesh is None:
+        return x
+    from repro.dist.sharding import shape_aware_spec
+    axes = ("group_batch",) + (None,) * (x.ndim - 1)
+    spec = shape_aware_spec(x.shape, axes, mesh)
+    return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _decompose_groups_device(
+        lp: Params, groups: List[Group], ccfg: CompressionConfig,
+        col: Optional[Collector], fisher: Optional[Dict[str, np.ndarray]],
+        mesh=None) -> Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Whitened decomposition of every group at its cost cap, batched by
+    shape bucket. Returns gid -> (sig fp64, B (d1,kmax), C (kmax,n·d2))
+    with B/C in the ORIGINAL space; final ranks slice columns later."""
+    buckets: Dict[Tuple, List[Group]] = {}
+    for g in groups:
+        buckets.setdefault((g.d_in, g.n * g.d_out, g.n, g.cost_cap),
+                           []).append(g)
+    out: Dict[str, Tuple] = {}
+    for (d1, nd2, n, kmax), gs in sorted(buckets.items()):
+        W = np.stack([
+            np.concatenate([_member_weight(lp, m, dtype=np.float32)
+                            for m in g.members], axis=1) for g in gs])
+        kwargs: Dict = {}
+        if ccfg.method == "fwsvd":
+            # same floor as num.diag_whitener: zero Fisher rows (dead
+            # units) must not divide the basis by zero
+            kwargs["diag"] = np.maximum(np.stack(
+                [fisher[g.members[0].tag] for g in gs]), 1e-8
+            ).astype(np.float32)
+        elif ccfg.method == "asvd":
+            kwargs["diag"] = np.stack([np.power(np.maximum(np.mean(
+                [col.mean_abs(m.tag) for m in g.members], axis=0),
+                1e-8), ccfg.asvd_alpha) for g in gs]).astype(np.float32)
+        elif ccfg.method != "svd":               # cholesky family
+            tags = [m.tag for g in gs for m in g.members]
+            if col.chol and all(t in col.chol for t in tags):
+                Rs = np.stack([np.stack([col.chol[m.tag].astype(np.float32)
+                                         for m in g.members]) for g in gs])
+                kwargs["factor"] = numj.combine_factors(
+                    _shard_group_batch(jnp.asarray(Rs), mesh))
+            else:
+                # buckets mixing whitened and plain tags fall back to
+                # Grams, substituting RᵀR for factor-only tags
+                kwargs["gram"] = _shard_group_batch(jnp.asarray(np.stack(
+                    [np.sum([_gram_of(col, m.tag) for m in g.members],
+                            axis=0) for g in gs]).astype(np.float32)),
+                    mesh)
+                kwargs["damp"] = ccfg.damp
+        rsvd = int(bool(ccfg.rsvd_threshold)
+                   and min(d1, nd2) >= ccfg.rsvd_threshold)
+        sig, B, C = numj.decompose(
+            _shard_group_batch(jnp.asarray(W), mesh), k=kmax, rsvd=rsvd,
+            rsvd_oversample=ccfg.rsvd_oversample,
+            rsvd_iters=ccfg.rsvd_iters, **kwargs)
+        sig = np.asarray(sig, dtype=np.float64)
+        B = np.asarray(B)
+        C = np.asarray(C)
+        if not np.isfinite(sig).all():
+            # device cholesky_escalate signals failure as NaNs; fail as
+            # loudly as the host oracle does on non-finite Grams
+            bad = [gs[i].gid for i in range(len(gs))
+                   if not np.isfinite(sig[i]).all()]
+            raise np.linalg.LinAlgError(
+                f"device decomposition produced non-finite spectra for "
+                f"groups {bad} (bucket d1={d1}, n·d2={nd2}) — "
+                f"non-finite calibration Grams or weights")
+        for i, g in enumerate(gs):
+            out[g.gid] = (sig[i], B[i], C[i])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -185,12 +276,28 @@ def _whitener_for(group: Group, ccfg: CompressionConfig, col: Collector,
         s = np.mean([col.mean_abs(m.tag) for m in group.members], axis=0)
         return num.diag_whitener(np.power(np.maximum(s, 1e-8),
                                           ccfg.asvd_alpha))
-    # cholesky family: aggregate the group's Grams (DESIGN.md §1.2)
+    # cholesky family. Streaming-whitened tags carry an upper-triangular
+    # factor RᵀR = G instead of a Gram (capture.StreamingCalibrator
+    # whiten_tags): members merge by stacked QR, never forming G.
+    tags = [m.tag for m in group.members]
+    if col.chol and all(t in col.chol for t in tags):
+        R = np.vstack([col.chol[t] for t in tags])
+        return num.whitener_from_factor(np.linalg.qr(R, mode="r"))
+    # otherwise aggregate the group's Grams (DESIGN.md §1.2); a group can
+    # mix whitened and plain members (whiten_tags is per-tag) — the
+    # factor's RᵀR stands in for the missing Gram
     G = None
     for m in group.members:
-        g = col.gram[m.tag]
+        g = _gram_of(col, m.tag)
         G = g if G is None else G + g
     return num.cholesky_whitener(G, ccfg.damp)
+
+
+def _gram_of(col: Collector, tag: str) -> np.ndarray:
+    if tag in col.gram:
+        return col.gram[tag]
+    R = col.chol[tag]
+    return R.T @ R
 
 
 def build_plan_and_params(
@@ -198,18 +305,29 @@ def build_plan_and_params(
         calib_batches: Sequence[Dict],
         collector: Optional[Collector] = None,
         streaming: bool = True,
+        device: bool = False,
+        mesh=None,
 ) -> Tuple[Params, Plan]:
     """Compress. Returns (list-form compressed params, plan).
 
     ``streaming`` selects the capture path when no ``collector`` is
-    supplied (see ``calibrate``)."""
+    supplied (see ``calibrate``). ``device=True`` dispatches the
+    decomposition math (whitening, whitened SVD, truncation, refine) to
+    the jit-compiled fp32 backend in ``numerics_jax`` — same-shaped
+    groups decompose in one batched call; rank allocation is unchanged
+    and works on the device-computed spectra. The host fp64 path
+    (``device=False``) is the precision oracle it is validated against
+    (tests/test_compress_device.py). With a ``mesh``, calibration shards
+    over the data axes and stacked group batches are placed along the
+    logical ``group_batch`` axis."""
     assert ccfg.method in METHODS, ccfg.method
     lp = to_list_params(params, cfg)
 
     needs_col = ccfg.method != "svd" or ccfg.refine
     col = collector
     if col is None and needs_col:
-        col = calibrate(lp, cfg, calib_batches, streaming=streaming)
+        col = calibrate(lp, cfg, calib_batches, streaming=streaming,
+                        mesh=mesh)
     fisher = (fisher_rows(lp, cfg, calib_batches)
               if ccfg.method == "fwsvd" else None)
 
@@ -224,20 +342,29 @@ def build_plan_and_params(
     gqa_one = ccfg.gqa_group_one and ccfg.method in ("drank", "dranke")
     groups = build_groups(refs, cfg, group_size, gqa_group_one=gqa_one)
 
-    # ---- SVD every group, collect spectra --------------------------------
+    # ---- decompose every group, collect spectra ---------------------------
+    # host: per-group fp64 whitening + SVD (the oracle); device: batched
+    # fp32 jit calls, one per shape bucket, factors kept at the cost cap
     svds: Dict[str, Tuple] = {}
+    dec: Dict[str, Tuple] = {}
+    sig_of: Dict[str, np.ndarray] = {}
+    if device:
+        dec = _decompose_groups_device(lp, groups, ccfg, col, fisher, mesh)
+        sig_of = {gid: d[0] for gid, d in dec.items()}
+    else:
+        for g in groups:
+            W_cat = np.concatenate(
+                [_member_weight(lp, m) for m in g.members], axis=1)
+            wh = _whitener_for(g, ccfg, col, fisher) if col or fisher \
+                else num.identity_whitener()
+            U, sig, Vt = num.whitened_svd(W_cat, wh)
+            svds[g.gid] = (U, sig, Vt, wh)
+            sig_of[g.gid] = sig
     gspecs: List[alloc.GroupSpec] = []
     for g in groups:
-        W_cat = np.concatenate([_member_weight(lp, m) for m in g.members],
-                               axis=1)
-        wh = _whitener_for(g, ccfg, col, fisher) if col or fisher \
-            else num.identity_whitener()
-        U, sig, Vt = num.whitened_svd(W_cat, wh)
-        reff = num.effective_rank(sig)
-        svds[g.gid] = (U, sig, Vt, wh)
         gspecs.append(alloc.GroupSpec(
-            gid=g.gid, mtype=g.mtype, reff=reff, omega=g.omega,
-            kmax=g.cost_cap, kmin=ccfg.min_rank,
+            gid=g.gid, mtype=g.mtype, reff=num.effective_rank(sig_of[g.gid]),
+            omega=g.omega, kmax=g.cost_cap, kmin=ccfg.min_rank,
             dense_params=g.dense_params))
 
     # ---- allocate ---------------------------------------------------------
@@ -250,8 +377,7 @@ def build_plan_and_params(
         ks = alloc.integerize(gspecs, kf, budget,
                               multiple=ccfg.rank_multiple)
     elif ccfg.method == "dranke":
-        sig_map = {gid: svds[gid][1] for gid in svds}
-        ks = alloc.energy_allocate(gspecs, sig_map, budget,
+        ks = alloc.energy_allocate(gspecs, sig_of, budget,
                                    multiple=ccfg.rank_multiple)
     else:
         ks = alloc.uniform_allocate(gspecs, ccfg.ratio,
@@ -264,9 +390,13 @@ def build_plan_and_params(
     expert_factors: Dict[Tuple, Dict[int, Tuple]] = {}
 
     for g, gs in zip(groups, gspecs):
-        U, sig, Vt, wh = svds[g.gid]
         k = ks[g.gid]
-        B, C = num.truncate_factors(U, sig, Vt, k, wh)
+        if device:
+            sig, Bfull, Cfull = dec[g.gid]
+            B, C = Bfull[:, :k], Cfull[:k]
+        else:
+            U, sig, Vt, wh = svds[g.gid]
+            B, C = num.truncate_factors(U, sig, Vt, k, wh)
         Bj = jnp.asarray(B, dtype=pdt)
         for i, m in enumerate(g.members):
             Ci = jnp.asarray(C[:, i * g.d_out:(i + 1) * g.d_out], dtype=pdt)
@@ -311,35 +441,85 @@ def build_plan_and_params(
     summary = alloc.allocation_summary(gspecs, ks)
     plan = Plan(config=ccfg, groups=results, summary=summary)
     if ccfg.refine:
-        new_lp = refine_coefficients(lp, new_lp, cfg, groups, ks, svds,
-                                     calib_batches, streaming=streaming)
+        # if calibration streamed whitening factors, the refine
+        # re-capture must too — otherwise it would re-materialize the
+        # very Grams whiten_tags exists to avoid
+        wt = (frozenset(col.chol) if col is not None and col.chol
+              and streaming and mesh is None else None)
+        new_lp = refine_coefficients(lp, new_lp, cfg, groups,
+                                     calib_batches, streaming=streaming,
+                                     device=device, mesh=mesh,
+                                     whiten_tags=wt)
     return new_lp, plan
 
 
 def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
-                        groups: List[Group], ks: Dict[str, int], svds: Dict,
+                        groups: List[Group],
                         calib_batches: Sequence[Dict],
-                        streaming: bool = True) -> Params:
+                        streaming: bool = True, device: bool = False,
+                        mesh=None, whiten_tags=None) -> Params:
     """Closed-form downstream update (the paper's ≥40% trick, after
     SVD-LLM): re-collect Grams THROUGH the compressed model (inputs now
     deviate from the originals) and re-solve each coefficient matrix
 
         C_i* = argmin_C ‖X_new (W_i − B C)‖_F = (Bᵀ G B)⁻¹ Bᵀ G W_i .
+
+    ``device=True`` batches the solves: members are bucketed by
+    (d_in, k, d_out) and each bucket runs one jitted fp32
+    ``numerics_jax.refine_solve`` (Cholesky + triangular solves) instead
+    of a host fp64 loop.
+
+    ``whiten_tags`` re-captures those tags as streaming Cholesky factors
+    (see ``capture.StreamingCalibrator``); the device solve then runs in
+    factor form (L₂ = Rᵀ), so a fully whiten-streamed refine never
+    materializes a Gram — the memory guarantee of whiten_tags holds
+    through the refine pass.
     """
-    col2 = calibrate(comp_lp, cfg, calib_batches, streaming=streaming)
-    for g in groups:
-        for i, m in enumerate(g.members):
-            if m.expert is not None or m.tag not in col2.gram:
-                continue
+    col2 = calibrate(comp_lp, cfg, calib_batches, streaming=streaming,
+                     mesh=mesh, whiten_tags=whiten_tags)
+    members = [m for g in groups for m in g.members
+               if m.expert is None
+               and (m.tag in col2.gram or m.tag in col2.chol)]
+    if device:
+        buckets: Dict[Tuple, List[MatrixRef]] = {}
+        for m in members:
             node = _get_node(comp_lp, m.path)
-            B = np.asarray(node["B"], dtype=np.float64)
-            G = col2.gram[m.tag]
-            W = _member_weight(orig_lp, m)
-            BtGB = B.T @ G @ B
-            BtGB += 1e-8 * np.trace(BtGB) / max(1, len(BtGB)) * np.eye(
-                B.shape[1])
-            C = np.linalg.solve(BtGB, B.T @ G @ W)
-            node["C"] = jnp.asarray(C, dtype=node["C"].dtype)
+            buckets.setdefault(
+                (m.d_in, int(node["B"].shape[1]), m.d_out), []).append(m)
+        for key, ms in sorted(buckets.items()):
+            B = jnp.stack([jnp.asarray(_get_node(comp_lp, m.path)["B"],
+                                       dtype=jnp.float32) for m in ms])
+            W = jnp.asarray(np.stack(
+                [_member_weight(orig_lp, m, dtype=np.float32)
+                 for m in ms]))
+            if all(m.tag in col2.chol for m in ms):
+                R = jnp.asarray(np.stack(
+                    [col2.chol[m.tag] for m in ms]).astype(np.float32))
+                C = numj.refine_solve(_shard_group_batch(B, mesh), None,
+                                      _shard_group_batch(W, mesh),
+                                      factor=_shard_group_batch(R, mesh))
+            else:
+                G = jnp.asarray(np.stack(
+                    [_gram_of(col2, m.tag) for m in ms]
+                ).astype(np.float32))
+                C = numj.refine_solve(_shard_group_batch(B, mesh),
+                                      _shard_group_batch(G, mesh),
+                                      _shard_group_batch(W, mesh))
+            C = np.asarray(C)
+            for i, m in enumerate(ms):
+                node = _get_node(comp_lp, m.path)
+                node["C"] = jnp.asarray(C[i], dtype=node["C"].dtype)
+        return comp_lp
+    for m in members:
+        node = _get_node(comp_lp, m.path)
+        B = np.asarray(node["B"], dtype=np.float64)
+        G = _gram_of(col2, m.tag)
+        W = _member_weight(orig_lp, m)
+        BtGB = B.T @ G @ B
+        BtGB += 1e-8 * np.trace(BtGB) / max(1, len(BtGB)) * np.eye(
+            B.shape[1])
+        C = np.linalg.solve(BtGB, B.T @ G @ W)
+        node["C"] = jnp.asarray(C, dtype=node["C"].dtype)
     return comp_lp
 
 

@@ -44,10 +44,18 @@ def cholesky_whitener(G: np.ndarray, damp: float = 1e-6) -> Whitener:
     """G: (d, d) fp64 Gram. Damped for rank-deficient calibration sets;
     escalates damping ×10 until the factorization succeeds."""
     d = G.shape[0]
+    if not np.isfinite(G).all():
+        # LAPACK may "succeed" on NaN/inf input and hand back a NaN
+        # factor; fail loudly instead of whitening with garbage
+        raise np.linalg.LinAlgError(
+            "cholesky whitener got a non-finite Gram; "
+            + _gram_condition_report(G))
     G = 0.5 * (G + G.T)
     tau = damp * max(np.trace(G) / d, 1e-12)
     eye = np.eye(d)
+    taus = []
     for _ in range(12):
+        taus.append(tau)
         try:
             L = np.linalg.cholesky(G + tau * eye)
             S = L.T                                  # upper triangular
@@ -55,7 +63,44 @@ def cholesky_whitener(G: np.ndarray, damp: float = 1e-6) -> Whitener:
             return Whitener(S=S, S_inv=S_inv)
         except np.linalg.LinAlgError:
             tau *= 10.0
-    raise np.linalg.LinAlgError("cholesky failed after damping escalation")
+    raise np.linalg.LinAlgError(
+        f"cholesky failed after {len(taus)} damping escalations "
+        f"(taus tried: {taus[0]:.3e} .. {taus[-1]:.3e}); "
+        + _gram_condition_report(G))
+
+
+def _gram_condition_report(G: np.ndarray) -> str:
+    """Diagnostic tail for the escalation failure message: a condition
+    estimate when the Gram is finite, the non-finite count when it isn't
+    (the only way damping can fail 12 times)."""
+    bad = int(np.size(G) - np.isfinite(G).sum())
+    if bad:
+        return f"Gram has {bad} non-finite entries"
+    try:
+        lam = np.linalg.eigvalsh(G)
+        cond = abs(lam).max() / max(abs(lam).min(), 1e-300)
+        return (f"Gram condition estimate {cond:.3e} "
+                f"(eig range [{lam.min():.3e}, {lam.max():.3e}])")
+    except np.linalg.LinAlgError:
+        return "Gram condition estimate unavailable (eigvalsh failed)"
+
+
+def whitener_from_factor(R: np.ndarray) -> Whitener:
+    """Whitener from an upper-triangular factor with ``RᵀR = G`` — the
+    streaming-whitening output (capture.StreamingCalibrator whiten_tags /
+    numerics_jax.combine_factors), which never materializes G. QR sign
+    ambiguity is fixed by making the diagonal positive; a tiny diagonal
+    floor guards rank-deficient streams the way damping does for Grams."""
+    R = np.asarray(R, dtype=np.float64)
+    d = R.shape[0]
+    s = np.sign(np.diag(R))
+    s[s == 0] = 1.0
+    S = s[:, None] * R
+    floor = 1e-7 * max(np.abs(np.diag(S)).max(), 1e-30)
+    dia = np.diag(S).copy()
+    S[np.arange(d), np.arange(d)] = np.maximum(dia, floor)
+    S_inv = np.linalg.solve(S, np.eye(d))
+    return Whitener(S=S, S_inv=S_inv)
 
 
 def diag_whitener(scale: np.ndarray, floor: float = 1e-8) -> Whitener:

@@ -39,6 +39,10 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "ssm_inner": ("model",),
     "conv": (),
     "layer_stack": (),
+    # leading axis of stacked same-shape compression-group batches
+    # (core.compress device path): spread whole groups over the data
+    # axes; replicates when the bucket doesn't divide (shape_aware_spec)
+    "group_batch": ("pod", "data"),
 }
 
 _CTX = threading.local()

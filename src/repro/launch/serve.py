@@ -39,6 +39,13 @@ def main(argv=None) -> int:
     ap.add_argument("--eager-capture", action="store_true",
                     help="calibrate with the eager host oracle instead of "
                          "the jit/device streaming capture")
+    ap.add_argument("--device-compress", action="store_true",
+                    help="run the compression math (whitening/SVD/refine) "
+                         "on device via the batched numerics_jax backend "
+                         "instead of the host fp64 loop")
+    ap.add_argument("--rsvd-threshold", type=int, default=0,
+                    help="with --device-compress: min-side size above "
+                         "which the exact eigh switches to randomized SVD")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
@@ -82,10 +89,12 @@ def main(argv=None) -> int:
             ccfg = CC.CompressionConfig(method=args.compress,
                                         ratio=args.ratio,
                                         group_size=args.group_size,
-                                        beta=args.beta)
+                                        beta=args.beta,
+                                        rsvd_threshold=args.rsvd_threshold)
             params, plan = CC.build_plan_and_params(
                 params, cfg, ccfg, calib,
-                streaming=not args.eager_capture)
+                streaming=not args.eager_capture,
+                device=args.device_compress)
             print(f"compressed with {args.compress}: "
                   f"{plan.summary['achieved_ratio']:.1%} removed")
             if args.save_compressed:

@@ -1,0 +1,508 @@
+"""PR-3 tentpole coverage: on-device compression math (numerics_jax) vs
+the host fp64 oracle (numerics), per stage and at plan level.
+
+Tolerance tiers (fp32 device math vs fp64 host math):
+
+  stage                           bar        why
+  ------------------------------  ---------  ---------------------------
+  damped Cholesky (L Lᵀ = G+τI)   1e-5 rel   one factorization, fp32
+  whitened spectrum σ             1e-5 rel   eigh of an explicit Gram
+  rank-k factors (B·C product)    1e-4 rel   truncation boundary mixing
+  refine solve C*                 2e-4 rel   normal equations + solve
+  randomized SVD                  ≤5% extra whitened reconstruction
+                                  error vs the exact rank-k optimum
+
+Plan level (the acceptance bar): ``build_plan_and_params(device=True)``
+must produce IDENTICAL integer rank allocations and token-identical
+greedy serve output vs the host path at default tolerances.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.core import numerics as num
+from repro.core import numerics_jax as numj
+from repro.core.capture import StreamingCalibrator, to_list_params
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+SIG_TOL = 1e-5
+FACTOR_TOL = 1e-4
+REFINE_TOL = 2e-4
+
+# tiny LLaMA-ish configs; n_layers=3 with group_size=2 forces a RAGGED
+# final group (n=1) in every groupable type
+CFG_MHA = get_config("llama-mini").replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=256, rank_multiple=4)
+CFG_GQA = CFG_MHA.replace(n_kv_heads=2)
+CFG_BF16 = CFG_MHA.replace(param_dtype="bfloat16")
+
+
+def _batches(cfg, n=2, batch=2, seq=32, seed=7):
+    key = jax.random.PRNGKey(seed)
+    return [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                          (batch, seq), 0, cfg.vocab_size)}
+            for i in range(n)]
+
+
+def _rand_spd(rng, d, rows=None):
+    X = rng.normal(size=(rows or 2 * d, d))
+    return X.T @ X
+
+
+def _host_factors(W, G, k, damp=1e-6):
+    wh = num.cholesky_whitener(G, damp)
+    U, s, Vt = num.whitened_svd(W, wh)
+    B, C = num.truncate_factors(U, s, Vt, k, wh)
+    return s, B, C, wh
+
+
+# ---------------------------------------------------------------------------
+# Stage parity on synthetic matrices (every shape regime)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d1,nd2", [(48, 96), (96, 48), (64, 64),
+                                    (32, 160)])
+def test_decompose_gram_parity(d1, nd2):
+    rng = np.random.default_rng(0)
+    b, k = 3, min(d1, nd2) // 3
+    W = rng.normal(size=(b, d1, nd2))
+    G = np.stack([_rand_spd(rng, d1) for _ in range(b)])
+    sig, B, C = numj.decompose(W, gram=G, k=k)
+    sig = np.asarray(sig, dtype=np.float64)
+    for i in range(b):
+        s0, B0, C0, wh = _host_factors(W[i], G[i], k)
+        assert np.abs(sig[i][:len(s0)] - s0).max() / s0.max() < SIG_TOL
+        R0 = B0 @ C0
+        R1 = np.asarray(B[i], np.float64) @ np.asarray(C[i], np.float64)
+        assert np.abs(R1 - R0).max() / np.abs(R0).max() < FACTOR_TOL
+        # whitened reconstruction error matches the Eckart-Young optimum
+        e0 = np.linalg.norm(wh.apply(W[i] - R0))
+        e1 = np.linalg.norm(wh.apply(W[i] - R1))
+        assert e1 <= e0 * (1 + 1e-4) + 1e-9
+
+
+def test_decompose_full_rank_is_exact():
+    rng = np.random.default_rng(1)
+    W = rng.normal(size=(2, 40, 64))
+    G = np.stack([_rand_spd(rng, 40) for _ in range(2)])
+    _, B, C = numj.decompose(W, gram=G, k=40)
+    R = np.asarray(B, np.float64) @ np.asarray(C, np.float64)
+    assert np.abs(R - W).max() < 1e-3 * np.abs(W).max()
+
+
+@pytest.mark.parametrize("mode", ["diag", "identity", "factor"])
+def test_decompose_other_whiteners(mode):
+    rng = np.random.default_rng(2)
+    b, d1, nd2, k = 2, 48, 80, 12
+    W = rng.normal(size=(b, d1, nd2))
+    if mode == "diag":
+        scale = np.abs(rng.normal(size=(b, d1))) + 0.5
+        sig, B, C = numj.decompose(W, diag=scale, k=k)
+        whs = [num.diag_whitener(scale[i]) for i in range(b)]
+    elif mode == "identity":
+        sig, B, C = numj.decompose(W, k=k)
+        whs = [num.identity_whitener() for _ in range(b)]
+    else:
+        G = np.stack([_rand_spd(rng, d1) for _ in range(b)])
+        R = np.stack([np.linalg.cholesky(G[i]).T for i in range(b)])
+        sig, B, C = numj.decompose(W, factor=R, k=k)
+        whs = [num.whitener_from_factor(R[i]) for i in range(b)]
+    for i in range(b):
+        U, s, Vt = num.whitened_svd(W[i], whs[i])
+        B0, C0 = num.truncate_factors(U, s, Vt, k, whs[i])
+        R0 = B0 @ C0
+        R1 = np.asarray(B[i], np.float64) @ np.asarray(C[i], np.float64)
+        assert np.abs(R1 - R0).max() / np.abs(R0).max() < FACTOR_TOL, mode
+
+
+def test_cholesky_escalate_matches_host():
+    rng = np.random.default_rng(3)
+    d = 24
+    # one healthy Gram, one rank-deficient (forces escalation), one zero
+    G = np.stack([_rand_spd(rng, d),
+                  _rand_spd(rng, d, rows=d // 4),
+                  np.zeros((d, d))])
+    L, tau = numj.cholesky_escalate(jnp.asarray(G, jnp.float32))
+    L = np.asarray(L, dtype=np.float64)
+    tau = np.asarray(tau, dtype=np.float64)
+    assert np.isfinite(L).all()
+    for i in range(3):
+        # same damping start as the host oracle; reconstruction holds
+        ref = num.cholesky_whitener(G[i])
+        got = L[i] @ L[i].T
+        want = G[i] + tau[i] * np.eye(d)
+        assert np.abs(got - want).max() <= 1e-5 * max(want.max(), 1e-9)
+        # host S and device Lᵀ agree on the healthy matrix
+        if i == 0:
+            assert np.abs(L[i].T - ref.S).max() / np.abs(ref.S).max() < 1e-4
+
+
+def test_rsvd_close_to_exact():
+    rng = np.random.default_rng(4)
+    b, d1, nd2, k = 2, 96, 192, 16
+    # decaying spectrum (the regime rsvd is for)
+    W = np.einsum("bik,bkj->bij", rng.normal(size=(b, d1, 24)),
+                  rng.normal(size=(b, 24, nd2)))
+    W += 0.01 * rng.normal(size=(b, d1, nd2))
+    G = np.stack([_rand_spd(rng, d1) for _ in range(b)])
+    sig, B, C = numj.decompose(W, gram=G, k=k, rsvd=1)
+    assert np.asarray(sig).shape[1] == k + 8          # top-l spectrum only
+    for i in range(b):
+        _, B0, C0, wh = _host_factors(W[i], G[i], k)
+        e0 = np.linalg.norm(wh.apply(W[i] - B0 @ C0))
+        R1 = np.asarray(B[i], np.float64) @ np.asarray(C[i], np.float64)
+        e1 = np.linalg.norm(wh.apply(W[i] - R1))
+        assert e1 <= e0 * 1.05 + 1e-9
+
+
+def test_refine_solve_parity():
+    rng = np.random.default_rng(5)
+    b, d, k, m = 3, 48, 10, 72
+    B = rng.normal(size=(b, d, k))
+    G = np.stack([_rand_spd(rng, d, rows=128) for _ in range(b)])
+    W = rng.normal(size=(b, d, m))
+    C = np.asarray(numj.refine_solve(
+        jnp.asarray(B, jnp.float32), jnp.asarray(G, jnp.float32),
+        jnp.asarray(W, jnp.float32)), dtype=np.float64)
+    for i in range(b):
+        BtGB = B[i].T @ G[i] @ B[i]
+        BtGB += 1e-8 * np.trace(BtGB) / k * np.eye(k)
+        C0 = np.linalg.solve(BtGB, B[i].T @ G[i] @ W[i])
+        assert np.abs(C[i] - C0).max() / np.abs(C0).max() < REFINE_TOL
+
+
+def test_combine_factors_matches_gram_sum():
+    rng = np.random.default_rng(6)
+    b, n, d = 2, 3, 20
+    Gs = np.stack([[_rand_spd(rng, d) for _ in range(n)]
+                   for _ in range(b)])
+    Rs = np.linalg.cholesky(Gs).swapaxes(-1, -2)
+    R = np.asarray(numj.combine_factors(jnp.asarray(Rs, jnp.float32)),
+                   dtype=np.float64)
+    for i in range(b):
+        want = Gs[i].sum(0)
+        got = R[i].T @ R[i]
+        assert np.abs(got - want).max() / np.abs(want).max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Plan-level parity: identical ranks, token-identical serving
+# ---------------------------------------------------------------------------
+def _plan_parity(cfg, method="drank", refine=False, device_kwargs=None,
+                 seed=0, beta=0.3, **ccfg_kw):
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(seed))
+    batches = _batches(cfg)
+    ccfg = CC.CompressionConfig(method=method, ratio=0.3, group_size=2,
+                                beta=beta, refine=refine, **ccfg_kw)
+    lp_h, plan_h = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False)
+    lp_d, plan_d = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False, device=True,
+                                            **(device_kwargs or {}))
+    ks_h = {g.gid: g.k for g in plan_h.groups}
+    ks_d = {g.gid: g.k for g in plan_d.groups}
+    assert ks_h == ks_d, {k: (ks_h[k], ks_d[k])
+                          for k in ks_h if ks_h[k] != ks_d.get(k)}
+    for gh, gd in zip(plan_h.groups, plan_d.groups):
+        assert gd.reff == pytest.approx(gh.reff, rel=1e-4), gh.gid
+    return lp_h, lp_d, plan_h
+
+
+@pytest.mark.parametrize("cfg,name", [(CFG_MHA, "mha"), (CFG_GQA, "gqa")])
+def test_plan_parity_and_token_identity(cfg, name):
+    lp_h, lp_d, _ = _plan_parity(cfg, refine=True)
+    prompts = np.arange(12, dtype=np.int32).reshape(2, 6) % cfg.vocab_size
+    th = Engine(lp_h, cfg, ServeConfig()).generate(prompts, n_new=8)
+    td = Engine(lp_d, cfg, ServeConfig()).generate(prompts, n_new=8)
+    assert (th == td).all(), name
+
+
+def test_plan_parity_bf16_params():
+    lp_h, lp_d, plan = _plan_parity(CFG_BF16)
+    for leaf in jax.tree.leaves(lp_d):
+        if hasattr(leaf, "dtype") and leaf.ndim >= 2:
+            assert leaf.dtype == jnp.bfloat16
+    loss, _ = T.lm_loss(lp_d, CFG_BF16, _batches(CFG_BF16, n=1)[0])
+    assert jnp.isfinite(loss)
+
+
+def test_ragged_group_shapes_bucketed():
+    """n_layers=3 + group_size=2 → every groupable type has a ragged n=1
+    tail group; device bucketing must keep them in their own batch."""
+    _, _, plan = _plan_parity(CFG_MHA)
+    ns = {g.mtype: sorted(g2.n for g2 in plan.groups
+                          if g2.mtype == g.mtype) for g in plan.groups}
+    assert ns["q"] == [1, 2]          # ragged tail exists and compressed
+
+
+def test_device_rsvd_plan_runs():
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    batches = _batches(cfg)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2,
+                                rsvd_threshold=32)
+    lp, plan = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                        streaming=False, device=True)
+    assert abs(plan.summary["achieved_ratio"] - 0.3) < 0.05
+    loss, _ = T.lm_loss(lp, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+def test_device_with_mesh_group_batch_sharding():
+    mesh = make_host_mesh(data=1, model=1)
+    params, _ = T.init_model(CFG_MHA, jax.random.PRNGKey(0))
+    batches = _batches(CFG_MHA)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2)
+    lp_h, plan_h = CC.build_plan_and_params(params, CFG_MHA, ccfg, batches,
+                                            streaming=False)
+    lp_d, plan_d = CC.build_plan_and_params(params, CFG_MHA, ccfg, batches,
+                                            device=True, mesh=mesh)
+    assert {g.gid: g.k for g in plan_d.groups} == \
+        {g.gid: g.k for g in plan_h.groups}
+
+
+@pytest.mark.parametrize("method", ["svd", "asvd", "svdllm", "fwsvd",
+                                    "dranke"])
+def test_device_parity_other_methods(method):
+    _plan_parity(CFG_MHA, method=method, beta=0.0)
+
+
+@pytest.mark.slow           # full-config sweep: every llama-mini shape
+def test_plan_parity_llama_mini_full():
+    cfg = get_config("llama-mini")
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    batches = _batches(cfg, n=2, seq=64)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2,
+                                beta=0.35)
+    lp_h, plan_h = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False)
+    lp_d, plan_d = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False, device=True)
+    assert {g.gid: g.k for g in plan_d.groups} == \
+        {g.gid: g.k for g in plan_h.groups}
+    prompts = np.arange(16, dtype=np.int32).reshape(2, 8) % cfg.vocab_size
+    th = Engine(lp_h, cfg, ServeConfig()).generate(prompts, n_new=8)
+    td = Engine(lp_d, cfg, ServeConfig()).generate(prompts, n_new=8)
+    assert (th == td).all()
+
+
+@pytest.mark.slow           # MoE sweep: routed-expert buckets on device
+def test_plan_parity_moe():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(9)
+    batches = [{"tokens": jax.random.randint(key, (2, 32), 0,
+                                             cfg.vocab_size)}]
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.2, group_size=2)
+    lp_h, plan_h = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False)
+    lp_d, plan_d = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            streaming=False, device=True)
+    assert {g.gid: g.k for g in plan_d.groups} == \
+        {g.gid: g.k for g in plan_h.groups}
+    xg = [g for g in plan_d.groups if g.mtype.startswith("x")]
+    assert xg, "routed experts missed the device path"
+    loss, _ = T.lm_loss(lp_d, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# Streaming whitening (capture → factor → compress)
+# ---------------------------------------------------------------------------
+def test_streaming_whitening_factor_parity():
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    batches = _batches(cfg)
+    oracle = CC.calibrate(lp, cfg, batches, streaming=False)
+    cal = StreamingCalibrator(lp, cfg, whiten_tags=True)
+    for b in batches:
+        cal.ingest(b)
+    col = cal.finalize()
+    assert not col.gram and set(col.chol) == set(oracle.gram)
+    for tag, R in col.chol.items():
+        assert np.allclose(R, np.triu(R))            # upper triangular
+        ref = oracle.gram[tag]
+        rel = np.abs(R.T @ R - ref).max() / (np.abs(ref).max() + 1e-12)
+        assert rel < 1e-4, (tag, rel)
+        # absmean/count statistics still flow for whitened tags
+        assert col.count[tag] == oracle.count[tag]
+        assert np.allclose(col.mean_abs(tag), oracle.mean_abs(tag),
+                           rtol=1e-4)
+
+
+def test_streaming_whitening_flush_invariance():
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    batches = _batches(cfg, n=3)
+    cols = []
+    for fe in (1, 8):
+        cal = StreamingCalibrator(lp, cfg, whiten_tags=True,
+                                  flush_every=fe)
+        for b in batches:
+            cal.ingest(b)
+        cols.append(cal.finalize())
+    for tag in cols[0].chol:
+        G0 = cols[0].chol[tag].T @ cols[0].chol[tag]
+        G1 = cols[1].chol[tag].T @ cols[1].chol[tag]
+        assert np.abs(G0 - G1).max() <= 1e-4 * (np.abs(G0).max() + 1e-12)
+
+
+def test_streaming_whitening_compress_host_and_device():
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    batches = _batches(cfg)
+    from repro.core.capture import streaming_calibrate
+    col = streaming_calibrate(lp, cfg, batches, whiten_tags=True)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2)
+    lp_h, plan_h = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            collector=col)
+    lp_d, plan_d = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            collector=col, device=True)
+    assert {g.gid: g.k for g in plan_d.groups} == \
+        {g.gid: g.k for g in plan_h.groups}
+    # factor-based compression tracks the gram-based oracle closely
+    oracle = CC.calibrate(lp, cfg, batches, streaming=False)
+    lp_o, plan_o = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            collector=oracle)
+    b0 = _batches(cfg, n=1)[0]
+    lo, _ = T.lm_loss(lp_o, cfg, b0)
+    lh, _ = T.lm_loss(lp_h, cfg, b0)
+    assert abs(float(lh) - float(lo)) < 5e-3
+
+
+def test_streaming_whitening_partial_tag_subset():
+    """whiten_tags can name a SUBSET of tags; groups and device buckets
+    then mix factor-carrying and gram-carrying members, and compression
+    must fall back to RᵀR for the factor-only tags on both paths."""
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    batches = _batches(cfg)
+    oracle = CC.calibrate(lp, cfg, batches, streaming=False)
+    some = sorted(oracle.gram)[::2]              # every other tag
+    from repro.core.capture import streaming_calibrate
+    col = streaming_calibrate(lp, cfg, batches, whiten_tags=some)
+    assert set(col.chol) == set(some)
+    assert set(col.gram) == set(oracle.gram) - set(some)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2)
+    lp_h, plan_h = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            collector=col)
+    lp_d, plan_d = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                            collector=col, device=True)
+    assert {g.gid: g.k for g in plan_d.groups} == \
+        {g.gid: g.k for g in plan_h.groups}
+    loss, _ = T.lm_loss(lp_d, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+def test_factor_mode_rank_deficient_stream_stays_finite():
+    """A streamed factor from fewer calibration rows than d is singular;
+    the device factor path must floor its diagonal like the host
+    whitener_from_factor does and keep the factors finite/close."""
+    rng = np.random.default_rng(12)
+    b, d1, nd2, k = 2, 32, 48, 6
+    W = rng.normal(size=(b, d1, nd2))
+    X = rng.normal(size=(b, d1 // 4, d1))        # rank d/4 << d
+    R = np.stack([np.linalg.qr(X[i], mode="r") for i in range(b)])
+    Rsq = np.zeros((b, d1, d1))
+    Rsq[:, :d1 // 4, :] = R                      # upper-tri, zero diag rows
+    sig, B, C = numj.decompose(W, factor=Rsq, k=k)
+    B = np.asarray(B, np.float64)
+    C = np.asarray(C, np.float64)
+    assert np.isfinite(B).all() and np.isfinite(C).all()
+    for i in range(b):
+        wh = num.whitener_from_factor(Rsq[i])
+        U, s, Vt = num.whitened_svd(W[i], wh)
+        B0, C0 = num.truncate_factors(U, s, Vt, k, wh)
+        R0, R1 = B0 @ C0, B[i] @ C[i]
+        assert np.abs(R1 - R0).max() / np.abs(R0).max() < 1e-2
+
+
+def test_refine_solve_factor_form_matches_gram_form():
+    rng = np.random.default_rng(13)
+    b, d, k, m = 2, 40, 8, 64
+    B = rng.normal(size=(b, d, k))
+    X = rng.normal(size=(b, 120, d))
+    G = np.einsum("bni,bnj->bij", X, X)
+    R = np.stack([np.linalg.qr(X[i], mode="r") for i in range(b)])
+    W = rng.normal(size=(b, d, m))
+    Bj = jnp.asarray(B, jnp.float32)
+    Wj = jnp.asarray(W, jnp.float32)
+    Cg = np.asarray(numj.refine_solve(
+        Bj, jnp.asarray(G, jnp.float32), Wj), np.float64)
+    Cf = np.asarray(numj.refine_solve(
+        Bj, None, Wj, factor=jnp.asarray(R, jnp.float32)), np.float64)
+    assert np.abs(Cf - Cg).max() / np.abs(Cg).max() < 5e-4
+
+
+def test_whiten_streamed_refine_never_materializes_grams():
+    """refine=True with whiten_tags=True: the refine re-capture streams
+    factors too, and the whole pipeline (host or device solve) runs
+    Gram-free while matching the eager-oracle refine closely."""
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    batches = _batches(cfg)
+    from repro.core.capture import streaming_calibrate
+    col = streaming_calibrate(lp, cfg, batches, whiten_tags=True)
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2,
+                                refine=True)
+    import repro.core.compress as CCmod
+    seen = {}
+    orig = CCmod.calibrate
+
+    def spy(*a, **kw):
+        c = orig(*a, **kw)
+        seen["gram_tags"] = len(c.gram)
+        seen["chol_tags"] = len(c.chol)
+        return c
+    CCmod.calibrate = spy
+    try:
+        lp_d, _ = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                           collector=col, device=True)
+    finally:
+        CCmod.calibrate = orig
+    assert seen == {"gram_tags": 0, "chol_tags": 22}   # refine recapture
+    oracle = CC.calibrate(lp, cfg, batches, streaming=False)
+    lp_o, _ = CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                       collector=oracle, streaming=False)
+    b0 = batches[0]
+    lo, _ = T.lm_loss(lp_o, cfg, b0)
+    ld, _ = T.lm_loss(lp_d, cfg, b0)
+    assert abs(float(ld) - float(lo)) < 5e-3
+
+
+def test_device_non_finite_gram_raises_like_host():
+    """Host raises on non-finite Grams (cholesky_whitener guard); the
+    device path must fail as loudly, not serve NaN factors."""
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    batches = _batches(cfg, n=1)
+    col = CC.calibrate(CC.to_list_params(params, cfg), cfg, batches,
+                       streaming=False)
+    col.gram[sorted(col.gram)[0]][0, 0] = np.nan
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2)
+    with pytest.raises(np.linalg.LinAlgError, match="non-finite"):
+        CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                 collector=col, device=True)
+    with pytest.raises(np.linalg.LinAlgError, match="non-finite"):
+        CC.build_plan_and_params(params, cfg, ccfg, batches,
+                                 collector=col)
+
+
+def test_streaming_whitening_rejects_mesh():
+    cfg = CFG_MHA
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    lp = to_list_params(params, cfg)
+    with pytest.raises(ValueError, match="whiten_tags"):
+        StreamingCalibrator(lp, cfg, mesh=make_host_mesh(),
+                            whiten_tags=True)

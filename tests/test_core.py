@@ -31,6 +31,16 @@ def test_effective_rank_properties(sigmas, scale):
     assert np.isclose(num.effective_rank(scale * s), r, rtol=1e-6)
 
 
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=32),
+       st.integers(0, 10 ** 9))
+@settings(max_examples=60, deadline=None)
+def test_effective_rank_permutation_invariance(sigmas, seed):
+    s = np.array(sigmas)
+    perm = np.random.default_rng(seed).permutation(len(s))
+    assert np.isclose(num.effective_rank(s[perm]), num.effective_rank(s),
+                      rtol=1e-9)
+
+
 def test_effective_rank_flat_spectrum():
     for n in (1, 4, 37):
         s = np.ones(n)
@@ -40,6 +50,26 @@ def test_effective_rank_flat_spectrum():
 def test_effective_rank_single_dominant():
     s = np.array([100.0, 1e-9, 1e-9])
     assert num.effective_rank(s) < 1.001
+
+
+# ---------------------------------------------------------------------------
+# Cholesky whitener: damping escalation on degenerate Grams
+# (deterministic counterparts always run in tests/test_numerics_properties)
+# ---------------------------------------------------------------------------
+@given(st.integers(4, 48), st.integers(1, 4), st.integers(0, 10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_cholesky_whitener_escalates_on_near_singular(d, rank_div, seed):
+    """Rank-deficient Grams (calibration rows << d, even rank 1) must
+    whiten without raising: damping escalates until the factorization
+    succeeds, S stays upper-triangular, and S·S⁻¹ = I."""
+    rng = np.random.default_rng(seed)
+    rows = max(1, d // (rank_div * 2))          # rank << d
+    X = rng.normal(size=(rows, d))
+    G = X.T @ X
+    wh = num.cholesky_whitener(G)
+    assert np.isfinite(wh.S).all() and np.isfinite(wh.S_inv).all()
+    assert np.allclose(wh.S, np.triu(wh.S))
+    assert np.allclose(wh.S @ wh.S_inv, np.eye(d), atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,186 @@
+"""Deterministic property sweeps + golden-value allocation fixtures.
+
+tests/test_core.py holds the hypothesis versions of the property tests,
+but that whole module is skipped when hypothesis isn't installed (the dev
+container doesn't ship it) — these seeded sweeps cover the same
+properties unconditionally, and the goldens pin the allocator's numeric
+behavior (lagrange_allocate / beta_rebalance / integerize) to
+hand-checked expected ranks so allocation changes can't drift silently.
+"""
+import numpy as np
+import pytest
+
+from repro.core import allocate as alloc
+from repro.core import numerics as num
+
+SEEDS = range(25)
+
+
+# ---------------------------------------------------------------------------
+# effective_rank properties (paper §3.2.1)
+# ---------------------------------------------------------------------------
+def test_effective_rank_bounds_and_scale_invariance():
+    for seed in SEEDS:
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 64))
+        s = rng.uniform(0.1, 100.0, size=n)
+        r = num.effective_rank(s)
+        assert 1.0 - 1e-9 <= r <= n + 1e-6
+        scale = float(rng.uniform(0.01, 100.0))
+        assert np.isclose(num.effective_rank(scale * s), r, rtol=1e-6)
+
+
+def test_effective_rank_permutation_invariance():
+    for seed in SEEDS:
+        rng = np.random.default_rng(seed)
+        s = rng.uniform(0.1, 100.0, size=int(rng.integers(2, 32)))
+        perm = rng.permutation(len(s))
+        assert np.isclose(num.effective_rank(s[perm]),
+                          num.effective_rank(s), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# cholesky_whitener: damping escalation on degenerate Grams
+# ---------------------------------------------------------------------------
+def test_cholesky_whitener_escalates_on_near_singular():
+    for seed in SEEDS:
+        rng = np.random.default_rng(seed)
+        d = int(rng.integers(4, 48))
+        rows = max(1, d // int(rng.integers(2, 9)))     # rank << d
+        X = rng.normal(size=(rows, d))
+        wh = num.cholesky_whitener(X.T @ X)
+        assert np.isfinite(wh.S).all() and np.isfinite(wh.S_inv).all()
+        assert np.allclose(wh.S, np.triu(wh.S))
+        assert np.allclose(wh.S @ wh.S_inv, np.eye(d), atol=1e-6)
+
+
+def test_cholesky_whitener_zero_gram():
+    wh = num.cholesky_whitener(np.zeros((8, 8)))
+    assert np.isfinite(wh.S).all()
+
+
+def test_cholesky_whitener_rejects_non_finite_gram():
+    """NaN/inf Grams must fail loudly with a diagnostic (some LAPACK
+    builds return a NaN factor without raising), not whiten garbage."""
+    with pytest.raises(np.linalg.LinAlgError, match="non-finite"):
+        num.cholesky_whitener(np.full((4, 4), np.nan))
+
+
+def test_cholesky_whitener_error_reports_taus_and_condition(monkeypatch):
+    """When escalation runs out, the error must carry the taus tried and
+    the Gram's condition estimate — not a bare LinAlgError."""
+    def always_fail(_):
+        raise np.linalg.LinAlgError("potrf")
+    monkeypatch.setattr(np.linalg, "cholesky", always_fail)
+    G = np.diag([1.0, 1e-12])
+    with pytest.raises(np.linalg.LinAlgError) as ei:
+        num.cholesky_whitener(G)
+    msg = str(ei.value)
+    assert "12 damping escalations" in msg
+    assert "taus tried" in msg
+    assert "condition estimate" in msg and "eig range" in msg
+
+
+def test_whitener_from_factor_matches_cholesky():
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(200, 24))
+    G = X.T @ X
+    R = np.linalg.qr(X, mode="r")               # RᵀR = G, streaming form
+    wh = num.whitener_from_factor(R)
+    ref = num.cholesky_whitener(G, damp=1e-12)
+    assert np.allclose(np.abs(wh.S), np.abs(ref.S), rtol=1e-6, atol=1e-8)
+    assert np.allclose(wh.S @ wh.S_inv, np.eye(24), atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Golden-value allocation fixtures (hand-checked expected ranks)
+# ---------------------------------------------------------------------------
+def _spec(gid, mtype, reff, omega, kmax=10 ** 9, kmin=1, dense=10 ** 6):
+    return alloc.GroupSpec(gid=gid, mtype=mtype, reff=reff, omega=omega,
+                           kmax=kmax, kmin=kmin, dense_params=dense)
+
+
+def test_golden_lagrange_sqrt_reff_proportionality():
+    """Equal omega ⇒ k ∝ √reff. reff 100 vs 400 at budget 30·128:
+    denom = √(100·128)+√(400·128) = 3·√12800, C = 3840/denom,
+    k0 = C·√(100/128) = 10, k1 = 2·k0 = 20. Hand-checked."""
+    gs = [_spec("g0", "q", 100.0, 128), _spec("g1", "q", 400.0, 128)]
+    k = alloc.lagrange_allocate(gs, 128.0 * 30)
+    assert k["g0"] == pytest.approx(10.0, rel=1e-9)
+    assert k["g1"] == pytest.approx(20.0, rel=1e-9)
+
+
+def test_golden_lagrange_inverse_sqrt_omega():
+    """Equal reff ⇒ k ∝ 1/√omega and budget is met exactly:
+    omegas 64/256 at budget 32000 ⇒ k = (500/3, 250/3). Hand-checked:
+    C = 32000/(√6400+√25600) = 400/3, k0 = C·1.25, k1 = C·0.625."""
+    gs = [_spec("g0", "q", 100.0, 64), _spec("g1", "q", 100.0, 256)]
+    k = alloc.lagrange_allocate(gs, 32000.0)
+    assert k["g0"] == pytest.approx(500.0 / 3.0, rel=1e-9)
+    assert k["g1"] == pytest.approx(250.0 / 3.0, rel=1e-9)
+    assert 64 * k["g0"] + 256 * k["g1"] == pytest.approx(32000.0)
+
+
+def test_golden_lagrange_kmax_clamp_redistributes():
+    """g0 hits kmax=5 in pass 1 (its unclamped share would be ≈83); the
+    freed budget re-solves over g1/g2: (1000 − 5·10)/(2·10) = 47.5 each.
+    Hand-checked water-filling."""
+    gs = [_spec("g0", "q", 1e6, 10, kmax=5),
+          _spec("g1", "q", 1e4, 10), _spec("g2", "q", 1e4, 10)]
+    k = alloc.lagrange_allocate(gs, 1000.0)
+    assert k["g0"] == 5.0
+    assert k["g1"] == pytest.approx(47.5, rel=1e-9)
+    assert k["g2"] == pytest.approx(47.5, rel=1e-9)
+
+
+def test_golden_beta_rebalance_qk_to_v():
+    """β=0.25 moves a quarter of each Q/K rank to V, split evenly:
+    q=10 → 7.5, k=8 → 6, extracted 4.5 → v=4+4.5=8.5. Hand-checked
+    (paper eq 9–12); o is not a donor or receiver and must not move."""
+    gs = [_spec("gq", "q", 10, 8), _spec("gk", "k", 10, 8),
+          _spec("gv", "v", 10, 8), _spec("go", "o", 10, 8)]
+    k = {"gq": 10.0, "gk": 8.0, "gv": 4.0, "go": 6.0}
+    out = alloc.beta_rebalance(gs, k, beta=0.25)
+    assert out == {"gq": 7.5, "gk": 6.0, "gv": 8.5, "go": 6.0}
+    assert sum(out.values()) == pytest.approx(sum(k.values()))
+
+
+def test_golden_beta_rebalance_receiver_kmax_cap():
+    """The V receiver clamps at its kmax (8): 4 + 4.5 would exceed it."""
+    gs = [_spec("gq", "q", 10, 8), _spec("gk", "k", 10, 8),
+          _spec("gv", "v", 10, 8, kmax=8)]
+    out = alloc.beta_rebalance(gs, {"gq": 10.0, "gk": 8.0, "gv": 4.0},
+                               beta=0.25)
+    assert out["gv"] == 8.0
+
+
+def test_golden_integerize_round_to_multiple_within_budget():
+    """Targets (12.4, 27.6), multiple 8, omega 10:
+    budget 400 → round-to-nearest (16, 24) costs exactly 400; the grow
+    step can't afford +8·10. Hand-checked greedy trace."""
+    gs = [_spec("g0", "q", 50.0, 10, kmax=100, dense=1000),
+          _spec("g1", "q", 50.0, 10, kmax=100, dense=1000)]
+    out = alloc.integerize(gs, {"g0": 12.4, "g1": 27.6}, 400.0, multiple=8)
+    assert out == {"g0": 16, "g1": 24}
+
+
+def test_golden_integerize_budget_repair_shrinks_most_over():
+    """Same targets at budget 320: (16, 24) costs 400 > 320, g0 is the
+    relatively most-over-target ((16−12.4)/12.4 ≈ 0.29) so it shrinks by
+    one multiple → (8, 24) = 320 exactly. Hand-checked greedy trace."""
+    gs = [_spec("g0", "q", 50.0, 10, kmax=100, dense=1000),
+          _spec("g1", "q", 50.0, 10, kmax=100, dense=1000)]
+    out = alloc.integerize(gs, {"g0": 12.4, "g1": 27.6}, 320.0, multiple=8)
+    assert out == {"g0": 8, "g1": 24}
+    assert sum(out[g.gid] * g.omega for g in gs) <= 320.0
+
+
+def test_golden_integerize_topup_spends_leftover():
+    """Multiple=1, targets (10.2, 20.2), budget 32·10: rounding gives
+    (10, 20) = 300; the top-up loop spends the leftover 20 on the
+    relatively most-compressed groups one step at a time → (11, 21)."""
+    gs = [_spec("g0", "q", 50.0, 10, kmax=100, dense=1000),
+          _spec("g1", "q", 50.0, 10, kmax=100, dense=1000)]
+    out = alloc.integerize(gs, {"g0": 10.2, "g1": 20.2}, 320.0, multiple=1)
+    assert out == {"g0": 11, "g1": 21}
+    assert sum(out[g.gid] * g.omega for g in gs) <= 320.0
