@@ -28,9 +28,9 @@ import os
 import time
 
 import jax
-import numpy as np
 
-from benchmarks.common import ROOT, cached, calib_batches
+from benchmarks.common import ROOT, cached, calib_batches, \
+    calib_max_rel_err as _max_rel_err
 from repro.configs import get_config
 from repro.core.capture import Collector, StreamingCalibrator, \
     to_list_params
@@ -46,19 +46,6 @@ PARITY_TOL = 1e-4
 
 def _eager_capture(lp, cfg, batches) -> Collector:
     return calibrate(lp, cfg, batches, streaming=False)
-
-
-def _max_rel_err(col: Collector, oracle: Collector) -> float:
-    worst = 0.0
-    for tag in oracle.gram:
-        ref = oracle.gram[tag]
-        got = col.gram[tag]
-        worst = max(worst, float(np.abs(got - ref).max()
-                                 / (np.abs(ref).max() + 1e-12)))
-        aref = oracle.absmean[tag]
-        worst = max(worst, float(np.abs(col.absmean[tag] - aref).max()
-                                 / (np.abs(aref).max() + 1e-12)))
-    return worst
 
 
 def run(force: bool = False, smoke: bool = False):

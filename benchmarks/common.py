@@ -79,3 +79,22 @@ def calib_batches(cfg, n_samples: int = 16, batch: int = 8,
 
 def ppl_of(params, cfg, batches) -> Dict[str, float]:
     return TS.evaluate_ppl(params, cfg, batches)
+
+
+def calib_max_rel_err(col, oracle) -> float:
+    """Worst relative error of a captured Collector vs the eager fp64
+    oracle, over every tag's Gram AND abs-sum statistics. Tags captured
+    as streaming-whitening factors compare through RᵀR (the Gram the
+    factor represents) — shared by the capture benches so the CI parity
+    bar stays uniform across the single-device and mesh paths."""
+    worst = 0.0
+    for tag in oracle.gram:
+        got = (col.gram[tag] if tag in col.gram
+               else col.chol[tag].T @ col.chol[tag])
+        ref = oracle.gram[tag]
+        worst = max(worst, float(np.abs(got - ref).max()
+                                 / (np.abs(ref).max() + 1e-12)))
+        aref = oracle.absmean[tag]
+        worst = max(worst, float(np.abs(col.absmean[tag] - aref).max()
+                                 / (np.abs(aref).max() + 1e-12)))
+    return worst

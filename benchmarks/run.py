@@ -28,8 +28,8 @@ def main(argv=None) -> int:
                          "to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import (calib_capture, compress_path, fig3_lora,
-                            fig4_decode_path, fig4_throughput,
+    from benchmarks import (calib_capture, calib_sharded, compress_path,
+                            fig3_lora, fig4_decode_path, fig4_throughput,
                             table1_effective_rank, table2_gqa, table3_ppl,
                             table5_beta, table8_calib)
 
@@ -94,8 +94,18 @@ def main(argv=None) -> int:
                   key=lambda r: r["speedup"])
         return f"device_speedup={dev['speedup']:.1f}x"
 
+    def d_calib_sharded(out):
+        by = {r["config"]["path"]: r for r in out["rows"]}
+        ratio = (by["mesh-sharded"]["tokens_per_s"]
+                 / max(by["mesh-replicated"]["tokens_per_s"], 1e-9))
+        err = max(r["max_rel_err"] for r in out["rows"])
+        return f"sharded_vs_replicated={ratio:.2f}x;err={err:.0e}"
+
     fig4_decode = functools.partial(fig4_decode_path.run, smoke=args.smoke)
     calib = functools.partial(calib_capture.run, smoke=args.smoke)
+    # runs in a subprocess when this process lacks the forced 8-device
+    # host platform (see benchmarks/calib_sharded.py)
+    calib_sh = functools.partial(calib_sharded.run, smoke=args.smoke)
     compress = functools.partial(compress_path.run, smoke=args.smoke)
 
     benches = [
@@ -107,6 +117,7 @@ def main(argv=None) -> int:
         ("fig4_throughput", fig4_throughput.run, d_fig4),
         ("fig4_decode_path", fig4_decode, d_fig4d),
         ("calib_capture", calib, d_calib),
+        ("calib_sharded", calib_sh, d_calib_sharded),
         ("compress_path", compress, d_compress),
         ("fig3_lora", fig3_lora.run, d_fig3),
     ]

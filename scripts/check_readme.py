@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""README command smoke: extract every fenced ``bash`` block from
+README.md and execute it (bash -euo pipefail, repo root, PYTHONPATH=src),
+so the walkthrough can never drift from the code. Blocks whose fence info
+string contains ``no-check`` are skipped (e.g. the 10-minute tier-1
+pytest command — CI runs it separately anyway).
+
+    python scripts/check_readme.py [README.md]
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE = re.compile(r"^```(?P<info>[^\n]*)\n(?P<body>.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def blocks(text: str):
+    for m in FENCE.finditer(text):
+        info = m.group("info").strip().split()
+        if not info or info[0] != "bash":
+            continue
+        if "no-check" in info:
+            continue
+        yield m.group("body")
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["README.md"])[0]
+    with open(os.path.join(ROOT, path)) as f:
+        todo = list(blocks(f.read()))
+    if not todo:
+        print(f"check_readme: no checkable bash blocks in {path}")
+        return 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for i, body in enumerate(todo, 1):
+        print(f"== README block {i}/{len(todo)} ==")
+        print(body.rstrip())
+        proc = subprocess.run(
+            ["bash", "-euo", "pipefail", "-c", body], cwd=ROOT, env=env)
+        if proc.returncode != 0:
+            print(f"check_readme: block {i} FAILED "
+                  f"(exit {proc.returncode})")
+            return proc.returncode
+    print(f"check_readme: {len(todo)} blocks ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

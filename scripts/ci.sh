@@ -21,6 +21,14 @@ fi
 echo "== fast-lane tests (-m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 
+echo "== public-API doctests =="
+python -m pytest -q --doctest-modules \
+  src/repro/core/compress.py src/repro/core/capture.py \
+  src/repro/serve/engine.py
+
+echo "== README command smoke =="
+python scripts/check_readme.py
+
 echo "== decode-path benchmark smoke =="
 python -m benchmarks.fig4_decode_path --smoke --force
 
@@ -29,6 +37,12 @@ python -m benchmarks.calib_capture --smoke --force
 
 echo "== compression-math benchmark smoke =="
 python -m benchmarks.compress_path --smoke --force
+
+echo "== sharded-calibration benchmark smoke (8-device host mesh) =="
+# --force even though the README smoke above usually just ran this bench:
+# relying on that cross-file coincidence would let an edited README leave
+# a stale cache re-emitting numbers the current commit never produced
+python -m benchmarks.calib_sharded --smoke --force
 
 echo "== BENCH json schemas =="
 python - <<'EOF'
@@ -51,6 +65,19 @@ err = max(r.get("max_rel_err", 0.0) for r in rows)
 assert err < 1e-4, f"streaming capture parity broke: {err}"
 print(f"ok: BENCH_calib.json {len(rows)} rows, paths={sorted(paths)}, "
       f"max_rel_err={err:.1e}")
+
+rows = json.load(open("BENCH_calib_sharded.json"))
+assert rows, "no sharded-calib benchmark rows"
+for r in rows:
+    assert {"bench", "config", "tokens_per_s", "ms_per_batch",
+            "max_rel_err"} <= set(r), r
+paths = {r["config"]["path"] for r in rows}
+assert {"mesh-replicated", "mesh-sharded", "mesh-whiten"} <= paths, paths
+assert all(r["config"]["devices"] == 8 for r in rows), rows
+err = max(r["max_rel_err"] for r in rows)
+assert err < 1e-4, f"mesh capture parity broke: {err}"
+print(f"ok: BENCH_calib_sharded.json {len(rows)} rows, "
+      f"paths={sorted(paths)}, max_rel_err={err:.1e}")
 
 rows = json.load(open("BENCH_compress.json"))
 assert rows, "no compress benchmark rows"
@@ -88,6 +115,14 @@ if [ "${BENCH_GATE:-on}" != "off" ]; then
   python scripts/bench_gate.py BENCH_compress.json \
     benchmarks/baselines/BENCH_compress.smoke.json --threshold "$THRESH" \
     --metric params_per_s
+  # the 8-fake-device mesh oversubscribes the 2-core runner ~4x: even
+  # best-of-3 windows swing ~2x under co-tenancy, so gate at 3x the base
+  # threshold — still catches a broken capture path (those regress by
+  # orders of magnitude) without flaking the lane; parity is gated hard
+  # above regardless
+  python scripts/bench_gate.py BENCH_calib_sharded.json \
+    benchmarks/baselines/BENCH_calib_sharded.smoke.json \
+    --threshold "$(python -c "print(min(0.9, 3*float('$THRESH')))")"
 else
   echo "== bench regression gate skipped (BENCH_GATE=off) =="
 fi

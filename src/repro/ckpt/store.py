@@ -15,6 +15,7 @@ critical path.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import queue
@@ -172,10 +173,23 @@ def _encode_pytree(tree):
     return walk(tree, ()), arrays
 
 
+def _content_hash(arr: np.ndarray) -> str:
+    """Content hash of one stored array: dtype + shape + raw bytes, so a
+    silent bit flip, truncation, or shape rewrite all change the digest."""
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
 def save_pytree(ckpt_dir: str, tree, meta: Optional[Dict] = None,
                 name: str = "pytree") -> str:
     """Atomic template-free save of an arbitrary dict/list pytree of arrays
-    to ``<ckpt_dir>/<name>/``. Returns the artifact path."""
+    to ``<ckpt_dir>/<name>/``. Returns the artifact path. The manifest
+    records a sha256 content hash per stored array; ``load_pytree
+    (verify=True)`` (and ``launch/serve.py --verify``) re-checks them at
+    boot."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, name)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_{name}_")
@@ -186,6 +200,7 @@ def save_pytree(ckpt_dir: str, tree, meta: Optional[Dict] = None,
             "format": "pytree_v1",
             "time": time.time(),
             "structure": structure,
+            "hashes": {k: _content_hash(v) for k, v in arrays.items()},
             "meta": meta or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -199,10 +214,13 @@ def save_pytree(ckpt_dir: str, tree, meta: Optional[Dict] = None,
     return final
 
 
-def load_pytree(ckpt_dir: str, name: str = "pytree") -> Tuple[Any, Dict]:
+def load_pytree(ckpt_dir: str, name: str = "pytree",
+                verify: bool = False) -> Tuple[Any, Dict]:
     """Inverse of ``save_pytree``: returns ``(tree, meta)``. Aliased leaves
     come back as the SAME jax array object (shared-basis dedup survives
-    the round trip)."""
+    the round trip). ``verify=True`` re-hashes every stored array against
+    the manifest's content hashes and raises ``ValueError`` on any
+    mismatch (or if the artifact predates hashing)."""
     path = os.path.join(ckpt_dir, name)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -210,6 +228,21 @@ def load_pytree(ckpt_dir: str, name: str = "pytree") -> Tuple[Any, Dict]:
         raise ValueError(f"{path}: not a pytree_v1 artifact")
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
+    if verify:
+        hashes = manifest.get("hashes")
+        if not hashes:
+            raise ValueError(
+                f"{path}: artifact has no content hashes (saved before "
+                f"integrity hashing); re-save to enable --verify")
+        bad = sorted(k for k in hashes
+                     if k not in arrays
+                     or _content_hash(arrays[k]) != hashes[k])
+        extra = sorted(set(arrays) - set(hashes))
+        if bad or extra:
+            raise ValueError(
+                f"{path}: artifact integrity check failed — "
+                f"corrupt/missing arrays {bad[:4]}"
+                + (f", unmanifested arrays {extra[:4]}" if extra else ""))
     cache: Dict[str, jax.Array] = {}
 
     def build(spec):

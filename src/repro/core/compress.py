@@ -66,7 +66,8 @@ class CompressionConfig:
 # ---------------------------------------------------------------------------
 def calibrate(list_params: Params, cfg: ModelConfig,
               batches: Iterable[Dict], *, streaming: bool = True,
-              mesh=None, whiten_tags=None) -> Collector:
+              mesh=None, whiten_tags=None,
+              shard_grams_above: int = 4096) -> Collector:
     """Collect per-tag Gram statistics over the calibration batches.
 
     ``streaming=True`` (default) runs the jit-compiled device-side capture
@@ -75,10 +76,37 @@ def calibrate(list_params: Params, cfg: ModelConfig,
     host path (``streaming=False``) is the fp64 oracle it is validated
     against (tests/test_calib_capture.py) and needs no compile step.
     ``whiten_tags`` (streaming only) captures those tags as streaming
-    Cholesky factors instead of Grams."""
+    Cholesky factors instead of Grams — on a mesh, per shard, tree-reduced
+    at finalize. ``shard_grams_above`` routes tags whose feature dim
+    reaches it to row-sharded (D,D) accumulators when a mesh is given.
+
+    Example::
+
+        >>> import jax
+        >>> from repro.configs import get_config
+        >>> from repro.core import compress as CC
+        >>> from repro.core.capture import to_list_params
+        >>> from repro.models import transformer as T
+        >>> cfg = get_config("llama-mini").replace(
+        ...     n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        ...     head_dim=16, d_ff=64, vocab_size=128)
+        >>> params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        >>> lp = to_list_params(params, cfg)
+        >>> batch = {"tokens": jax.random.randint(
+        ...     jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}
+        >>> col = CC.calibrate(lp, cfg, [batch])
+        >>> col.gram["decoder/run0/0/attn/wq"].shape
+        (32, 32)
+    """
     if streaming:
         return streaming_calibrate(list_params, cfg, batches, mesh=mesh,
-                                   whiten_tags=whiten_tags)
+                                   whiten_tags=whiten_tags,
+                                   shard_grams_above=shard_grams_above)
+    if whiten_tags:
+        raise ValueError(
+            "whiten_tags requires streaming=True: the eager fp64 oracle "
+            "materializes every Gram by construction, so a non-streaming "
+            "whitened capture would silently void the memory guarantee")
     tagged = tag_linears(list_params)
     col = Collector()
     with col:
@@ -307,6 +335,8 @@ def build_plan_and_params(
         streaming: bool = True,
         device: bool = False,
         mesh=None,
+        whiten_tags=None,
+        shard_grams_above: int = 4096,
 ) -> Tuple[Params, Plan]:
     """Compress. Returns (list-form compressed params, plan).
 
@@ -319,7 +349,30 @@ def build_plan_and_params(
     (``device=False``) is the precision oracle it is validated against
     (tests/test_compress_device.py). With a ``mesh``, calibration shards
     over the data axes and stacked group batches are placed along the
-    logical ``group_batch`` axis."""
+    logical ``group_batch`` axis. ``whiten_tags`` (True = all; streaming
+    capture only) streams whitening factors instead of Grams for those
+    tags, mesh or not — see ``capture.StreamingCalibrator``.
+
+    Example (compress a tiny model 30% and check the plan)::
+
+        >>> import jax
+        >>> from repro.configs import get_config
+        >>> from repro.core import compress as CC
+        >>> from repro.models import transformer as T
+        >>> cfg = get_config("llama-mini").replace(
+        ...     n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        ...     head_dim=16, d_ff=64, vocab_size=128, rank_multiple=1)
+        >>> params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        >>> calib = [{"tokens": jax.random.randint(
+        ...     jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}]
+        >>> ccfg = CC.CompressionConfig(method="drank", ratio=0.3,
+        ...                             group_size=2)
+        >>> comp, plan = CC.build_plan_and_params(params, cfg, ccfg, calib)
+        >>> abs(plan.summary["achieved_ratio"] - 0.3) < 0.05
+        True
+        >>> sorted({g.mtype for g in plan.groups})
+        ['down', 'gate', 'k', 'o', 'q', 'up', 'v']
+    """
     assert ccfg.method in METHODS, ccfg.method
     lp = to_list_params(params, cfg)
 
@@ -327,7 +380,8 @@ def build_plan_and_params(
     col = collector
     if col is None and needs_col:
         col = calibrate(lp, cfg, calib_batches, streaming=streaming,
-                        mesh=mesh)
+                        mesh=mesh, whiten_tags=whiten_tags,
+                        shard_grams_above=shard_grams_above)
     fisher = (fisher_rows(lp, cfg, calib_batches)
               if ccfg.method == "fwsvd" else None)
 
@@ -443,13 +497,15 @@ def build_plan_and_params(
     if ccfg.refine:
         # if calibration streamed whitening factors, the refine
         # re-capture must too — otherwise it would re-materialize the
-        # very Grams whiten_tags exists to avoid
+        # very Grams whiten_tags exists to avoid (the mesh path streams
+        # per-shard factors and tree-reduces them, so it qualifies)
         wt = (frozenset(col.chol) if col is not None and col.chol
-              and streaming and mesh is None else None)
+              and streaming else None)
         new_lp = refine_coefficients(lp, new_lp, cfg, groups,
                                      calib_batches, streaming=streaming,
                                      device=device, mesh=mesh,
-                                     whiten_tags=wt)
+                                     whiten_tags=wt,
+                                     shard_grams_above=shard_grams_above)
     return new_lp, plan
 
 
@@ -457,7 +513,8 @@ def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
                         groups: List[Group],
                         calib_batches: Sequence[Dict],
                         streaming: bool = True, device: bool = False,
-                        mesh=None, whiten_tags=None) -> Params:
+                        mesh=None, whiten_tags=None,
+                        shard_grams_above: int = 4096) -> Params:
     """Closed-form downstream update (the paper's ≥40% trick, after
     SVD-LLM): re-collect Grams THROUGH the compressed model (inputs now
     deviate from the originals) and re-solve each coefficient matrix
@@ -476,7 +533,8 @@ def refine_coefficients(orig_lp: Params, comp_lp: Params, cfg: ModelConfig,
     through the refine pass.
     """
     col2 = calibrate(comp_lp, cfg, calib_batches, streaming=streaming,
-                     mesh=mesh, whiten_tags=whiten_tags)
+                     mesh=mesh, whiten_tags=whiten_tags,
+                     shard_grams_above=shard_grams_above)
     members = [m for g in groups for m in g.members
                if m.expert is None
                and (m.tag in col2.gram or m.tag in col2.chol)]
@@ -539,7 +597,31 @@ def save_plan(ckpt_dir: str, list_params: Params, plan: Plan,
               cfg: Optional[ModelConfig] = None) -> str:
     """Persist the factorized list-form params + allocation plan so serving
     can boot WITHOUT re-running compression. Shared group bases are stored
-    once (``store.save_pytree`` aliases identical leaves)."""
+    once (``store.save_pytree`` aliases identical leaves), and the
+    manifest records per-array content hashes for ``load_plan
+    (verify=True)`` / ``serve.py --verify``.
+
+    Example (full round trip; continues the ``build_plan_and_params``
+    example)::
+
+        >>> import tempfile, jax
+        >>> from repro.configs import get_config
+        >>> from repro.core import compress as CC
+        >>> from repro.models import transformer as T
+        >>> cfg = get_config("llama-mini").replace(
+        ...     n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        ...     head_dim=16, d_ff=64, vocab_size=128, rank_multiple=1)
+        >>> params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        >>> calib = [{"tokens": jax.random.randint(
+        ...     jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}]
+        >>> comp, plan = CC.build_plan_and_params(
+        ...     params, cfg, CC.CompressionConfig(ratio=0.3), calib)
+        >>> d = tempfile.mkdtemp()
+        >>> path = CC.save_plan(d, comp, plan, cfg)
+        >>> lp, plan2 = CC.load_plan(d, cfg=cfg, verify=True)
+        >>> plan2.to_json() == plan.to_json()
+        True
+    """
     from repro.ckpt import store
     meta: Dict = {"plan": json.loads(plan.to_json())}
     if cfg is not None:
@@ -548,12 +630,15 @@ def save_plan(ckpt_dir: str, list_params: Params, plan: Plan,
                              name=ARTIFACT_NAME)
 
 
-def load_plan(ckpt_dir: str, cfg: Optional[ModelConfig] = None
-              ) -> Tuple[Params, Plan]:
+def load_plan(ckpt_dir: str, cfg: Optional[ModelConfig] = None,
+              verify: bool = False) -> Tuple[Params, Plan]:
     """Load a compressed artifact saved by ``save_plan``. If ``cfg`` is
-    given, its fingerprint must match the one recorded at save time."""
+    given, its fingerprint must match the one recorded at save time.
+    ``verify=True`` re-hashes every stored array against the manifest
+    content hashes before booting (see ``store.load_pytree``)."""
     from repro.ckpt import store
-    params, meta = store.load_pytree(ckpt_dir, name=ARTIFACT_NAME)
+    params, meta = store.load_pytree(ckpt_dir, name=ARTIFACT_NAME,
+                                     verify=verify)
     plan = Plan.from_json(json.dumps(meta["plan"]))
     if cfg is not None and "model" in meta:
         want = _model_fingerprint(cfg)

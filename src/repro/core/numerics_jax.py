@@ -25,8 +25,10 @@ so effective-rank allocation sees the same input as the oracle.
 For very large min-sides the exact eigh itself dominates; ``rsvd > 0``
 switches to a randomized range-finder (Halko et al.: Gaussian sketch +
 subspace iterations + small eigh) that only pays GEMMs in the large
-dimensions. Its spectrum is top-(k+oversample) only — allocation on top of
-it is approximate (DESIGN.md §1.5).
+dimensions. Its top-(k+oversample) estimates are approximate, but the
+truncated tail energy is restored exactly via the trace identity
+(``_dec_rsvd``), so rank allocation sees a full-length spectrum with the
+right total energy (DESIGN.md §1.5).
 
 Structure note: the pipeline is deliberately split into SEVERAL small
 jitted stages instead of one fused jit. XLA:CPU runs the dense dots in a
@@ -114,6 +116,29 @@ def combine_factors(Rs: jax.Array) -> jax.Array:
     b, n, d, _ = Rs.shape
     stacked = Rs.astype(jnp.float32).reshape(b, n * d, d)
     return jnp.linalg.qr(stacked, mode="r")
+
+
+@jax.jit
+def tree_reduce_factors(Rs: jax.Array) -> jax.Array:
+    """Exact distributed-whitening reduction (DESIGN.md §1.6): merge
+    per-shard streaming factors ``Rs (m, d, d)`` (R_iᵀR_i = G_i, one per
+    data-parallel shard) into a single R with ``RᵀR = Σ_i G_i`` by
+    PAIRWISE rounds ``R' = qr_r([R_a; R_b])``. Each round is an orthogonal
+    transform of the stacked rows, so any reduction order yields the same
+    RᵀR — the tree order keeps every QR at (2d, d), the per-hop shape a
+    ring/tree reduction would run on a real mesh, and the result matches
+    the single-shard QR chain up to fp rounding and row signs."""
+    Rs = Rs.astype(jnp.float32)
+    m = Rs.shape[0]
+    while m > 1:
+        half = m // 2
+        pairs = jnp.concatenate([Rs[:half], Rs[half:2 * half]], axis=1)
+        reduced = jnp.linalg.qr(pairs, mode="r")      # (half, d, d)
+        if m % 2:
+            reduced = jnp.concatenate([reduced, Rs[2 * half:]], axis=0)
+        Rs = reduced
+        m = Rs.shape[0]
+    return Rs[0]
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +249,46 @@ def _dec_right(W, L, sL, k):
     return sig, B, C
 
 
+def _tail_spectrum(sig_l: jax.Array, tail_energy: jax.Array,
+                   n_tail: int) -> jax.Array:
+    """Synthetic spectrum for the n_tail singular values an rsvd sketch
+    never saw: geometric decay ``σ²_{l+j} = σ²_l ρ^j`` continuing from
+    the last estimated value, with ρ bisected per batch member so the
+    tail sums to the (exactly known) truncated energy, then renormalized
+    so the energy identity holds to roundoff. Degenerate cases (σ_l = 0,
+    ρ → 1, zero tail) all collapse to a flat tail with the right energy
+    via the renormalization. The final clamp at σ²_l keeps the full
+    spectrum NON-INCREASING (the allocators' ordering invariant) even
+    when the truncated energy exceeds ``n_tail·σ²_l`` — i.e. when the
+    sketch underestimated σ_l itself — at the cost of undercounting
+    energy in exactly that saturated regime: ordering beats exactness
+    there. Returns (b, n_tail) singular values."""
+    s2 = jnp.maximum(sig_l.astype(jnp.float32) ** 2, 1e-30)     # (b,)
+    x = tail_energy / s2                    # target Σρ^j in [0, n_tail]
+    lo = jnp.zeros_like(x)
+    hi = jnp.ones_like(x)
+    for _ in range(30):                     # fp32 bisection on (0, 1)
+        mid = 0.5 * (lo + hi)
+        f = mid * (1.0 - mid ** n_tail) / (1.0 - mid + 1e-12)
+        below = f < x
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+    rho = 0.5 * (lo + hi)
+    j = jnp.arange(1, n_tail + 1, dtype=jnp.float32)
+    t = s2[:, None] * rho[:, None] ** j                         # (b, n)
+    t = t * (tail_energy / jnp.maximum(t.sum(axis=1), 1e-30))[:, None]
+    return jnp.sqrt(jnp.minimum(t, s2[:, None]))
+
+
 def _dec_rsvd(W, L, sL, k, oversample, iters, seed):
     """Randomized range-finder decomposition. Only GEMMs touch the large
-    dimensions; the eigh is (k+oversample)². Returns a TOP-l spectrum."""
+    dimensions; the eigh is (k+oversample)². The returned spectrum is the
+    top-l estimate EXTENDED by a synthetic geometric tail carrying the
+    exact truncated energy (trace identity): ``‖M‖²_F = Σσ²`` is a cheap
+    elementwise reduce, so ``tail = ‖M‖²_F − Σ_top-l σ̂²`` distributed
+    over the min(d1, n·d2) − l unseen slots (``_tail_spectrum``) keeps
+    total energy — and hence effective-rank allocation — honest for rsvd
+    buckets instead of silently dropping the tail (DESIGN.md §1.5)."""
     b, d1, nd2 = W.shape
     ell = min(k + oversample, d1, nd2)
     M = _whiten_big(W, L, sL)
@@ -238,6 +300,13 @@ def _dec_rsvd(W, L, sL, k, oversample, iters, seed):
     T = _tn_project(M, Q)                           # Mᵀ Q : (b, nd2, l)
     lam, Uh = _eigh_desc(_tn_project(T, T))
     sig = jnp.sqrt(jnp.clip(lam, 0.0))              # top-l spectrum
+    n_tail = min(d1, nd2) - ell
+    if n_tail > 0:
+        total = jnp.sum(M * M, axis=(1, 2))         # Σ σ², exact
+        captured = jnp.sum(jnp.clip(lam, 0.0), axis=1)
+        tail = jnp.maximum(total - captured, 0.0)
+        sig = jnp.concatenate(
+            [sig, _tail_spectrum(sig[:, ell - 1], tail, n_tail)], axis=1)
     Uk = _bmm(Q, Uh[:, :, :k])
     sigk = sig[:, :k]
     C = jnp.swapaxes(_bmm(T, Uh[:, :, :k]), 1, 2) \
@@ -266,7 +335,11 @@ def decompose(W: jax.Array, *, gram: Optional[jax.Array] = None,
 
     Returns ``(sig, B, C)`` with ``W ≈ B @ C`` at rank k in the ORIGINAL
     space, B (b, d1, k), C (b, k, n·d2), and sig the full whitened
-    spectrum (top-(k+oversample) only when ``rsvd > 0``).
+    spectrum. With ``rsvd > 0`` only the top-(k+oversample) entries are
+    estimated individually; the rest are a synthetic geometric-decay tail
+    holding the exact truncated energy (``_tail_spectrum``), so
+    allocation metrics built on Σσ² (effective rank, energy shares) stay
+    calibrated.
     """
     assert sum(x is not None for x in (gram, factor, diag)) <= 1
     W = jnp.asarray(W).astype(jnp.float32)

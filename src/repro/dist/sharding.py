@@ -43,6 +43,14 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     # (core.compress device path): spread whole groups over the data
     # axes; replicates when the bucket doesn't divide (shape_aware_spec)
     "group_batch": ("pod", "data"),
+    # streaming-calibration accumulators (core.capture mesh path):
+    # "calib_shard" is the per-shard stacking axis of streaming-whitening
+    # QR factors (one (d, d) factor per data shard, tree-reduced at
+    # finalize); "gram_rows" is the row dimension of sharded (D, D) Gram
+    # accumulators — each device holds a (D/n_shards, D) block and folds
+    # its rows of XᵀX from all-gathered activations (DESIGN.md §1.6)
+    "calib_shard": ("pod", "data"),
+    "gram_rows": ("pod", "data"),
 }
 
 _CTX = threading.local()
@@ -144,6 +152,27 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     spec = shape_aware_spec(x.shape, axes, mesh)
     return jax.lax.with_sharding_constraint(
         x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def axis_group_size(mesh, axes: Sequence[str]) -> int:
+    """Total number of shards along a folded mesh-axis group."""
+    size = 1
+    for a in axes:
+        size *= dict(mesh.shape)[a]
+    return size
+
+
+def combined_axis_index(axes: Sequence[str], mesh) -> jax.Array:
+    """Row-major linear shard index along a folded axis group — the
+    ``shard_map``-body counterpart of folding several mesh axes into one
+    PartitionSpec entry (e.g. the sharded-Gram row blocks: the block a
+    device owns is ``combined_axis_index * block_rows``)."""
+    mesh_shape = dict(mesh.shape)
+    idx = None
+    for a in axes:
+        i = jax.lax.axis_index(a)
+        idx = i if idx is None else idx * mesh_shape[a] + i
+    return idx if idx is not None else 0
 
 
 def shardings_for_tree(params, specs, mesh):

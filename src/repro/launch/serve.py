@@ -7,9 +7,11 @@ latency/throughput.
         --ckpt runs/mini_mha --compress drank --ratio 0.3 \
         --save-compressed runs/mini_drank30 --requests 16 --n-new 32
 
-    # later: serve the artifact directly (no calibration/SVD at boot)
+    # later: serve the artifact directly (no calibration/SVD at boot);
+    # --verify re-checks the manifest content hashes first
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
-        --compressed-ckpt runs/mini_drank30 --requests 16 --n-new 32
+        --compressed-ckpt runs/mini_drank30 --verify --requests 16 \
+        --n-new 32
 """
 from __future__ import annotations
 
@@ -36,9 +38,31 @@ def main(argv=None) -> int:
                          "(skips --ckpt/--compress)")
     ap.add_argument("--save-compressed", default="",
                     help="after --compress, persist the artifact here")
+    ap.add_argument("--verify", action="store_true",
+                    help="with --compressed-ckpt: re-hash the stored "
+                         "arrays against the manifest content hashes "
+                         "before booting")
     ap.add_argument("--eager-capture", action="store_true",
                     help="calibrate with the eager host oracle instead of "
                          "the jit/device streaming capture")
+    ap.add_argument("--whiten-stream", action="store_true",
+                    help="stream whitening Cholesky factors instead of "
+                         "Grams during calibration (QR updates; the Gram "
+                         "is never materialized — DESIGN.md §1.5/§1.6)")
+    ap.add_argument("--calib-mesh-shards", type=int, default=0,
+                    help="calibrate over a (data=N) mesh of local "
+                         "devices (sharded batch + accumulators; needs "
+                         ">= N devices, e.g. a TPU host or "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N); 0 = single-device capture")
+    ap.add_argument("--shard-grams-above", type=int, default=4096,
+                    help="with --calib-mesh-shards: feature dim at which "
+                         "calibration (D,D) accumulators shard row-wise "
+                         "over the mesh data axes instead of replicating")
+    ap.add_argument("--calib-samples", type=int, default=16,
+                    help="calibration samples for --compress")
+    ap.add_argument("--calib-seq", type=int, default=128,
+                    help="calibration sequence length for --compress")
     ap.add_argument("--device-compress", action="store_true",
                     help="run the compression math (whitening/SVD/refine) "
                          "on device via the batched numerics_jax backend "
@@ -66,10 +90,11 @@ def main(argv=None) -> int:
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
     if args.compressed_ckpt:
         cb = ContinuousBatcher.from_compressed(args.compressed_ckpt, cfg,
-                                               scfg)
+                                               scfg, verify=args.verify)
         print(f"booted from compressed checkpoint {args.compressed_ckpt} "
               f"({cb.plan.summary['achieved_ratio']:.1%} removed, "
-              f"method={cb.plan.config.method})")
+              f"method={cb.plan.config.method}"
+              + (", integrity verified" if args.verify else "") + ")")
     else:
         if args.ckpt:
             state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
@@ -81,11 +106,45 @@ def main(argv=None) -> int:
             print("serving a randomly initialized model (no --ckpt)")
 
         if args.compress:
+            if args.whiten_stream and args.eager_capture:
+                ap.error("--whiten-stream needs the streaming capture; "
+                         "drop --eager-capture (the eager fp64 oracle "
+                         "always materializes Grams)")
+            calib_batch = 8           # rows per calibration batch
+            mesh = None
+            if args.calib_mesh_shards > 1:
+                if args.eager_capture:
+                    ap.error("--calib-mesh-shards needs the streaming "
+                             "capture; drop --eager-capture")
+                # shard_map splits batch ROWS over the data axis: the
+                # calibration batch must divide, and a ragged final
+                # batch (calib_samples % calib_batch) would too — fail
+                # at parse time, not deep inside lowering
+                if calib_batch % args.calib_mesh_shards != 0:
+                    ap.error(f"--calib-mesh-shards "
+                             f"{args.calib_mesh_shards} must divide the "
+                             f"calibration batch of {calib_batch} rows")
+                if args.calib_samples % calib_batch != 0:
+                    ap.error(f"--calib-samples {args.calib_samples} "
+                             f"must be a multiple of {calib_batch} with "
+                             f"--calib-mesh-shards (a ragged final "
+                             f"batch cannot split over the mesh)")
+                n_dev = len(jax.devices())
+                if n_dev < args.calib_mesh_shards:
+                    ap.error(f"--calib-mesh-shards {args.calib_mesh_shards}"
+                             f" but only {n_dev} local devices (set "
+                             f"XLA_FLAGS=--xla_force_host_platform_"
+                             f"device_count={args.calib_mesh_shards} to "
+                             f"fake a host mesh)")
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh(data=args.calib_mesh_shards, model=1)
             import jax.numpy as jnp
-            dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
-                              global_batch=8)
+            dcfg = DataConfig(vocab_size=cfg.vocab_size,
+                              seq_len=args.calib_seq,
+                              global_batch=calib_batch)
             calib = [{"tokens": jnp.asarray(b["tokens"])}
-                     for b in calibration_batches(dcfg, 16, 8)]
+                     for b in calibration_batches(
+                         dcfg, args.calib_samples, calib_batch)]
             ccfg = CC.CompressionConfig(method=args.compress,
                                         ratio=args.ratio,
                                         group_size=args.group_size,
@@ -94,7 +153,10 @@ def main(argv=None) -> int:
             params, plan = CC.build_plan_and_params(
                 params, cfg, ccfg, calib,
                 streaming=not args.eager_capture,
-                device=args.device_compress)
+                device=args.device_compress,
+                mesh=mesh,
+                whiten_tags=(True if args.whiten_stream else None),
+                shard_grams_above=args.shard_grams_above)
             print(f"compressed with {args.compress}: "
                   f"{plan.summary['achieved_ratio']:.1%} removed")
             if args.save_compressed:

@@ -55,12 +55,39 @@ class Engine:
 
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
-                        scfg: ServeConfig) -> "Engine":
+                        scfg: ServeConfig, verify: bool = False) -> "Engine":
         """Boot directly from a ``compress.save_plan`` artifact — no
         calibration or SVD at serve time; the factorized list-form params
-        drop straight into the model code."""
+        drop straight into the model code. ``verify=True`` re-hashes the
+        stored arrays against the manifest content hashes first
+        (``launch/serve.py --verify``).
+
+        Example (boot from an artifact and generate; continues the
+        ``compress.save_plan`` example)::
+
+            >>> import tempfile, jax, numpy as np
+            >>> from repro.configs import get_config
+            >>> from repro.core import compress as CC
+            >>> from repro.models import transformer as T
+            >>> from repro.serve.engine import Engine, ServeConfig
+            >>> cfg = get_config("llama-mini").replace(
+            ...     n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+            ...     head_dim=16, d_ff=64, vocab_size=128, rank_multiple=1)
+            >>> params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+            >>> calib = [{"tokens": jax.random.randint(
+            ...     jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}]
+            >>> comp, plan = CC.build_plan_and_params(
+            ...     params, cfg, CC.CompressionConfig(ratio=0.3), calib)
+            >>> d = tempfile.mkdtemp()
+            >>> _ = CC.save_plan(d, comp, plan, cfg)
+            >>> eng = Engine.from_compressed(d, cfg, ServeConfig(),
+            ...                              verify=True)
+            >>> prompts = np.arange(8, dtype=np.int32).reshape(2, 4)
+            >>> eng.generate(prompts, n_new=3).shape
+            (2, 3)
+        """
         from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg)
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify)
         eng = cls(params, cfg, scfg)
         eng.plan = plan
         return eng
@@ -168,11 +195,12 @@ class ContinuousBatcher:
 
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
-                        scfg: ServeConfig) -> "ContinuousBatcher":
+                        scfg: ServeConfig,
+                        verify: bool = False) -> "ContinuousBatcher":
         """Boot the batcher from a saved compressed checkpoint (see
-        ``Engine.from_compressed``)."""
+        ``Engine.from_compressed``; ``verify`` checks content hashes)."""
         from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg)
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify)
         cb = cls(params, cfg, scfg)
         cb.plan = plan
         return cb

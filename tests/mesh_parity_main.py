@@ -1,0 +1,138 @@
+"""Mesh-parity driver for the PR-5 tentpole: runs in its OWN process with
+``--xla_force_host_platform_device_count=8`` (jax locks the device count at
+backend init, so an in-process pytest cannot re-mesh; see
+tests/test_mesh_parity.py for the subprocess wrapper and the acceptance
+bars it enforces).
+
+Checks, all on a (data=8, model=1) host mesh against single-device
+streaming capture and the eager fp64 oracle:
+
+  1. tree-reduced whitening factor == single-shard streaming factor
+     (≤1e-6 rel after diagonal sign fix — Cholesky-factor uniqueness)
+     and its RᵀR == the oracle Gram
+  2. sharded (D,D) accumulators: flush equality vs the replicated route,
+     and the sharding-spec assertion that no device ever holds a full
+     (D,D) block for sharded-route tags
+  3. flush-cadence invariance under the two-stage pipelined fold
+  4. plan parity: identical integer ranks and token-identical serve from
+     a mesh-captured (sharded + whitened) calibration vs the eager oracle
+
+Prints MESH_PARITY_OK on success; any assertion kills the process.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+
+from repro.configs import get_config                        # noqa: E402
+from repro.core import compress as CC                       # noqa: E402
+from repro.core.capture import (StreamingCalibrator,        # noqa: E402
+                                streaming_calibrate, to_list_params)
+from repro.launch.mesh import make_host_mesh                # noqa: E402
+from repro.models import transformer as T                   # noqa: E402
+from repro.serve.engine import Engine, ServeConfig          # noqa: E402
+
+CFG = get_config("llama-mini").replace(n_layers=2, d_model=64, n_heads=4,
+                                       n_kv_heads=4, head_dim=16, d_ff=128,
+                                       vocab_size=256, rank_multiple=4)
+REL_BAR = 1e-6
+
+
+def batches(cfg, n=3, batch=8, seq=32, seed=7):
+    key = jax.random.PRNGKey(seed)
+    return [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                          (batch, seq), 0, cfg.vocab_size)}
+            for i in range(n)]
+
+
+def rel(a, b):
+    return float(np.abs(a - b).max() / (np.abs(b).max() + 1e-12))
+
+
+def sign_fix(R):
+    s = np.sign(np.diag(R)).copy()
+    s[s == 0] = 1.0
+    return s[:, None] * R
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh(data=8, model=1)
+    params, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    lp = to_list_params(params, CFG)
+    bs = batches(CFG)
+    oracle = CC.calibrate(lp, CFG, bs, streaming=False)
+
+    # -- 1. tree-reduced whitening factors ---------------------------------
+    col1 = streaming_calibrate(lp, CFG, bs, whiten_tags=True)
+    col8 = streaming_calibrate(lp, CFG, bs, mesh=mesh, whiten_tags=True)
+    assert set(col8.chol) == set(col1.chol) and not col8.gram
+    worst_r = worst_g = 0.0
+    for tag in col1.chol:
+        worst_r = max(worst_r, rel(sign_fix(col8.chol[tag]),
+                                   sign_fix(col1.chol[tag])))
+        worst_g = max(worst_g, rel(col8.chol[tag].T @ col8.chol[tag],
+                                   oracle.gram[tag]))
+    assert worst_r <= REL_BAR, f"tree-reduced factor drifted: {worst_r:.2e}"
+    print(f"  [1] tree-reduced factor vs 1-shard chain: {worst_r:.1e} rel "
+          f"(RᵀR vs fp64 oracle Gram: {worst_g:.1e})")
+
+    # -- 2. sharded accumulators: spec assertion + flush equality ----------
+    cal = StreamingCalibrator(lp, CFG, mesh=mesh, shard_grams_above=1)
+    for b in bs:
+        cal.ingest(b)
+    assert set(cal.routes.values()) == {"sharded"}, cal.routes
+    for tag, acc in cal._accs.items():
+        g = acc["gram"]
+        local = g.sharding.shard_shape(g.shape)
+        assert local[0] * 8 == g.shape[0] and local[1] == g.shape[1], (
+            tag, local, g.shape)      # row block only, never a full (D,D)
+        assert len(g.addressable_shards) == 8
+    col_sh = cal.finalize()
+    col_rep = streaming_calibrate(lp, CFG, bs, mesh=mesh)   # replicated
+    worst = 0.0
+    for tag in oracle.gram:
+        worst = max(worst, rel(col_sh.gram[tag], col_rep.gram[tag]),
+                    rel(col_sh.gram[tag], oracle.gram[tag]))
+        assert col_sh.count[tag] == oracle.count[tag]
+    assert worst <= 1e-5, f"sharded-accumulator flush diverged: {worst:.2e}"
+    print(f"  [2] sharded vs replicated accumulator flush: {worst:.1e} rel "
+          f"(specs row-sharded 8-way on every tag)")
+
+    # -- 3. flush-cadence invariance under the pipelined fold --------------
+    col_f1 = streaming_calibrate(lp, CFG, bs, mesh=mesh, flush_every=1,
+                                 shard_grams_above=1)
+    worst = max(rel(col_f1.gram[t], col_sh.gram[t]) for t in col_f1.gram)
+    assert worst <= 1e-6, f"flush cadence changed sharded sums: {worst:.2e}"
+    print(f"  [3] flush-cadence invariance (pipelined fold): {worst:.1e}")
+
+    # -- 4. identical ranks + token-identical serve ------------------------
+    ccfg = CC.CompressionConfig(method="drank", ratio=0.3, group_size=2,
+                                beta=0.3)
+    col_mesh = streaming_calibrate(lp, CFG, bs, mesh=mesh,
+                                   shard_grams_above=1,
+                                   whiten_tags={t for t in oracle.gram
+                                                if "/wq" in t})
+    comp_o, plan_o = CC.build_plan_and_params(params, CFG, ccfg, bs,
+                                              collector=oracle)
+    comp_m, plan_m = CC.build_plan_and_params(params, CFG, ccfg, bs,
+                                              collector=col_mesh)
+    ranks_o = {g.gid: g.k for g in plan_o.groups}
+    ranks_m = {g.gid: g.k for g in plan_m.groups}
+    assert ranks_m == ranks_o, {k: (ranks_o[k], ranks_m[k])
+                                for k in ranks_o if ranks_o[k] != ranks_m[k]}
+    prompts = (np.arange(24, dtype=np.int32).reshape(2, 12)
+               % CFG.vocab_size)
+    out_o = Engine(comp_o, CFG, ServeConfig()).generate(prompts, n_new=12)
+    out_m = Engine(comp_m, CFG, ServeConfig()).generate(prompts, n_new=12)
+    assert (out_o == out_m).all()
+    print(f"  [4] mesh-captured plan: {len(ranks_m)} groups, ranks "
+          f"identical, serve token-identical")
+    print("MESH_PARITY_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -225,6 +225,46 @@ def test_save_plan_artifact_dedupes_shared_bases(compressed_mini, tmp_path):
     assert unique < total     # grouping actually shared something
 
 
+def test_artifact_verify_passes_on_clean_artifact(compressed_mini, tmp_path):
+    comp, plan = compressed_mini
+    CC.save_plan(str(tmp_path), comp, plan, CFG)
+    loaded, _ = CC.load_plan(str(tmp_path), cfg=CFG, verify=True)
+    for a, b in zip(jax.tree.leaves(comp), jax.tree.leaves(loaded)):
+        assert jnp.array_equal(a, b)
+    eng = Engine.from_compressed(str(tmp_path), CFG, ServeConfig(),
+                                 verify=True)
+    assert eng.plan is not None
+
+
+def test_artifact_verify_catches_corruption(compressed_mini, tmp_path):
+    """A single flipped array in arrays.npz must fail --verify at boot."""
+    comp, plan = compressed_mini
+    CC.save_plan(str(tmp_path), comp, plan, CFG)
+    npz = tmp_path / "compressed" / "arrays.npz"
+    arrays = dict(np.load(str(npz)))
+    victim = sorted(arrays)[0]
+    arrays[victim] = arrays[victim] + np.float32(1e-3)
+    np.savez(str(npz), **arrays)
+    with pytest.raises(ValueError, match="integrity"):
+        CC.load_plan(str(tmp_path), cfg=CFG, verify=True)
+    # unverified load still works (prod escape hatch for legacy artifacts)
+    loaded, _ = CC.load_plan(str(tmp_path), cfg=CFG)
+    assert loaded is not None
+
+
+def test_artifact_verify_rejects_unhashed_manifest(compressed_mini,
+                                                   tmp_path):
+    import json as _json
+    comp, plan = compressed_mini
+    CC.save_plan(str(tmp_path), comp, plan, CFG)
+    mpath = tmp_path / "compressed" / "manifest.json"
+    manifest = _json.loads(mpath.read_text())
+    del manifest["hashes"]
+    mpath.write_text(_json.dumps(manifest))
+    with pytest.raises(ValueError, match="no content hashes"):
+        CC.load_plan(str(tmp_path), cfg=CFG, verify=True)
+
+
 def test_pytree_store_roundtrip_bf16_and_lists(tmp_path):
     from repro.ckpt import store
     tree = {"a": [jnp.ones((2, 3), jnp.bfloat16),
