@@ -30,8 +30,9 @@ def main(argv=None) -> int:
 
     from benchmarks import (calib_capture, calib_sharded, compress_path,
                             fig3_lora, fig4_decode_path, fig4_throughput,
-                            table1_effective_rank, table2_gqa, table3_ppl,
-                            table5_beta, table8_calib)
+                            serve_degrade, table1_effective_rank,
+                            table2_gqa, table3_ppl, table5_beta,
+                            table8_calib)
 
     def d_table3(out):
         rows = {(r["method"], r.get("ratio")): r["ppl"]
@@ -101,12 +102,20 @@ def main(argv=None) -> int:
         err = max(r["max_rel_err"] for r in out["rows"])
         return f"sharded_vs_replicated={ratio:.2f}x;err={err:.0e}"
 
+    def d_serve_degrade(out):
+        by = {r["config"]["level"]: r["tokens_per_s"]
+              for r in out["rows"] if r["config"]["mode"] == "pinned"}
+        deepest = max(by)
+        return (f"degrade_speedup@L{deepest}="
+                f"{by[deepest] / max(by[0], 1e-9):.2f}x")
+
     fig4_decode = functools.partial(fig4_decode_path.run, smoke=args.smoke)
     calib = functools.partial(calib_capture.run, smoke=args.smoke)
     # runs in a subprocess when this process lacks the forced 8-device
     # host platform (see benchmarks/calib_sharded.py)
     calib_sh = functools.partial(calib_sharded.run, smoke=args.smoke)
     compress = functools.partial(compress_path.run, smoke=args.smoke)
+    degrade = functools.partial(serve_degrade.run, smoke=args.smoke)
 
     benches = [
         ("table1_effective_rank", table1_effective_rank.run, d_table1),
@@ -119,6 +128,7 @@ def main(argv=None) -> int:
         ("calib_capture", calib, d_calib),
         ("calib_sharded", calib_sh, d_calib_sharded),
         ("compress_path", compress, d_compress),
+        ("serve_degrade", degrade, d_serve_degrade),
         ("fig3_lora", fig3_lora.run, d_fig3),
     ]
     if args.skip_slow:

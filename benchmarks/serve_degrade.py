@@ -1,0 +1,182 @@
+"""Elastic-rank degradation ladder benchmark (ISSUE 6 / DESIGN.md §5):
+decode throughput and TTFT of the continuous batcher at every rung of the
+pow2 rank-bucket ladder sliced from one compressed artifact, plus one
+adaptive run where queue pressure drives the rung selection.
+
+This is the serving-side claim of the paper's layer-wise dynamic rank:
+because the saved B/C factors are singular-value-ordered, ONE artifact
+serves a whole latency/quality ladder by slicing — no re-SVD, no extra
+checkpoints, one extra decode compile per rung. The benchmark quantifies
+what each rung buys (tokens/s up, rank down) so the degrade policy's
+thresholds are grounded in measured numbers rather than folklore.
+
+Emits ``BENCH_serve_degrade.json`` — one row per rung with the schema
+``{bench, config, tokens_per_s, ms_per_step, ttft_p50_ms}`` — alongside
+the usual result cache. ``--smoke`` shrinks the model and workload for CI
+(scripts/ci.sh gates tokens_per_s against a committed baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ROOT, cached, calib_batches
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.models import transformer as T
+from repro.serve import admission as adm
+from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
+
+BENCH_JSON = os.path.join(ROOT, "BENCH_serve_degrade.json")
+
+RATIO = 0.5
+LEVELS = 2
+GRID = {"slots": 4, "max_len": 256, "requests": 16, "prompt_len": 16,
+        "n_new": 32}
+SMOKE_GRID = {"slots": 2, "max_len": 64, "requests": 6, "prompt_len": 8,
+              "n_new": 8}
+MEASURE_REPS = 3        # best-of-N: sub-ms step windows swing ~2x under
+#                         this container's scheduler noise (see fig4)
+
+
+def _workload(grid, vocab, seed=0, rid_base=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid_base + i, n_new=grid["n_new"],
+                    tokens=rng.integers(0, vocab, size=(grid["prompt_len"],),
+                                        dtype=np.int32))
+            for i in range(grid["requests"])]
+
+
+def _ranks(tree):
+    out = set()
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "B" in node and "C" in node:
+                out.add(int(node["B"].shape[-1]))
+            else:
+                for v in node.values():
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return out
+
+
+def _make_batcher(params, cfg, grid, acfg=None, level=None):
+    scfg = ServeConfig(batch=grid["slots"], max_len=grid["max_len"])
+    cb = ContinuousBatcher(params, cfg, scfg, admission=acfg)
+    if level is not None and level > 0:
+        # pin a rung as a single-entry ladder: the degrade/restore policy
+        # can't move off it, so the measurement is the level itself
+        cb.ladder = [CC.slice_rank_ladder(params, levels=level)[-1]]
+    return cb
+
+
+def _measure(cb, cfg, grid, reps=MEASURE_REPS):
+    """Drain the workload once untimed (pays every jit compile for this
+    rung), then time ``reps`` fresh drains of the same shape and keep the
+    best — sub-ms step windows swing ~2x under scheduler noise."""
+    warm = _workload(grid, cfg.vocab_size, seed=1, rid_base=10_000)
+    for r in warm:
+        cb.submit(r)
+    res = cb.run_until_drained()
+    assert res.status == "drained", res.status
+    best = None
+    for rep in range(reps):
+        work = _workload(grid, cfg.vocab_size, rid_base=rep * 1000)
+        steps0 = cb.metrics()["steps"]
+        for r in work:
+            cb.submit(r)
+        t0 = time.perf_counter()
+        res = cb.run_until_drained()
+        dt = time.perf_counter() - t0
+        assert res.status == "drained", res.status
+        steps = cb.metrics()["steps"] - steps0
+        toks = sum(len(r.out) for r in work)
+        ttft = [r.t_first - r.t_submit for r in work]
+        m = {"tokens_per_s": toks / dt,
+             "ms_per_step": dt / max(1, steps) * 1e3,
+             "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3)}
+        if best is None or m["ms_per_step"] < best["ms_per_step"]:
+            best = m
+    best["_residency"] = cb.metrics()["rank_residency"]
+    best["_rank_max"] = max(_ranks(cb.ladder[cb.level]) or {0})
+    return best
+
+
+def run(force: bool = False, smoke: bool = False):
+    name = "serve_degrade" + ("_smoke" if smoke else "")
+    grid = SMOKE_GRID if smoke else GRID
+
+    def compute():
+        cfg = get_config("llama-mini")
+        if smoke:
+            cfg = cfg.reduced()
+        params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        calib = calib_batches(cfg, n_samples=4, seq_len=32)
+        ccfg = CC.CompressionConfig(method="drank", ratio=RATIO,
+                                    group_size=2, beta=0.3)
+        comp, _ = CC.build_plan_and_params(params, cfg, ccfg, calib)
+        rows = []
+        for level in range(LEVELS + 1):
+            cb = _make_batcher(comp, cfg, grid, level=level)
+            m = _measure(cb, cfg, grid)
+            rank_max = m.pop("_rank_max")
+            m.pop("_residency")
+            rows.append({"bench": "serve_degrade",
+                         "config": {"model": f"drank@{RATIO:.0%}",
+                                    "mode": "pinned", "level": level},
+                         "rank_max": rank_max, **m})
+            print(f"  sdg level={level} rank_max={rank_max}: "
+                  f"{m['tokens_per_s']:.0f} tok/s "
+                  f"ttft_p50={m['ttft_p50_ms']:.0f}ms", flush=True)
+        # adaptive run: the policy itself picks rungs under queue pressure
+        acfg = adm.AdmissionConfig(elastic=True, elastic_levels=LEVELS,
+                                   degrade_above=grid["slots"],
+                                   restore_below=1)
+        cb = _make_batcher(comp, cfg, grid, acfg=acfg)
+        m = _measure(cb, cfg, grid)
+        residency = m.pop("_residency")
+        m.pop("_rank_max")
+        rows.append({"bench": "serve_degrade",
+                     "config": {"model": f"drank@{RATIO:.0%}",
+                                "mode": "elastic", "level": -1},
+                     "rank_residency": residency, **m})
+        print(f"  sdg elastic residency={residency}: "
+              f"{m['tokens_per_s']:.0f} tok/s", flush=True)
+        return {"rows": rows}
+
+    out = cached(name, compute, force)
+    write_bench_json(out["rows"])
+    return out
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> str:
+    keep = ("bench", "config", "tokens_per_s", "ms_per_step",
+            "ttft_p50_ms", "rank_max", "rank_residency")
+    payload = [{k: r[k] for k in keep if k in r} for r in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(force=args.force, smoke=args.smoke)
+    print(json.dumps(out["rows"], indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,21 +7,36 @@ committed smoke baseline and fail on a throughput regression.
 
 Rows are matched by their full ``config`` dict. ``pallas-interpret`` rows
 are skipped — interpreter wall-times are correctness evidence, not a perf
-claim (DESIGN.md §3). Baselines were recorded on the repo's CI container;
-the threshold is deliberately loose (25%) to absorb machine-to-machine
-variance, and ``--update`` refreshes a baseline in place after an
-intentional perf change.
+claim (DESIGN.md §3).
+
+**Per-machine calibration** (ISSUE 6 / ROADMAP "normalize to a
+calibration row"): baselines written with ``--update`` carry a
+``_calibration`` row — the score of a fixed single-threaded numpy matmul
+probe measured ON THE MACHINE THAT RECORDED THE BASELINE. At gate time
+the probe runs again and every baseline metric is scaled by
+``clamp(score_now / score_then, 1/3, 3)`` before the diff: a runner half
+as fast as the recorder is expected to produce half the tokens/s, and no
+longer needs a hand-tuned ``BENCH_GATE_THRESHOLD`` to pass. The clamp
+bounds how much slack a wildly different machine can claim, so a real 10x
+regression still fails everywhere. Baselines without the row gate
+unscaled (scale 1), exactly as before.
 
 ``--metric`` selects the throughput field: decode/calib benches gate
 ``tokens_per_s``; the compression-math bench gates its tokens/s
 equivalent ``params_per_s`` (dense parameters decomposed per second).
+``--update`` refreshes a baseline in place (recording the calibration
+row) after an intentional perf change.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import shutil
 import sys
+import time
+
+CAL_BENCH = "_calibration"
+CAL_PROBE = "numpy-matmul-256"
+CAL_CLAMP = 3.0                 # max speed ratio honored either direction
 
 
 def _key(row):
@@ -29,18 +44,70 @@ def _key(row):
 
 
 def _skip(row) -> bool:
+    if row.get("bench") == CAL_BENCH:
+        return True
     return "interpret" in str(row["config"].get("path", ""))
+
+
+def measure_calibration(reps: int = 20, loops: int = 16) -> float:
+    """Score of a fixed numpy workload (float64 256x256 matmul chain),
+    best-of-``reps`` windows. Deterministic shape/content; the score is
+    ~GFLOP/s of the BLAS this machine actually dispatches to — the same
+    arithmetic the benches themselves lean on. Each window is ~10ms and
+    only the best counts, so co-tenant scheduler noise has ``reps``
+    chances to miss at least one window (single shots swung ~30% on the
+    containers this gate runs in)."""
+    import numpy as np
+    n = 256
+    a = np.arange(n * n, dtype=np.float64).reshape(n, n) / (n * n)
+    b = a.T.copy()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        c = a
+        for _ in range(loops):
+            c = c @ b
+        c.sum()                         # keep the chain alive
+        best = min(best, time.perf_counter() - t0)
+    flops = 2.0 * loops * n**3
+    return flops / best / 1e9
+
+
+def calibration_row(score: float) -> dict:
+    return {"bench": CAL_BENCH, "config": {"probe": CAL_PROBE},
+            "score": round(score, 3)}
+
+
+def machine_scale(baseline_rows) -> tuple:
+    """(scale, detail) — how much faster/slower this machine is than the
+    one that recorded the baseline, clamped; (1.0, reason) when the
+    baseline predates calibration rows."""
+    ref = next((r for r in baseline_rows
+                if r.get("bench") == CAL_BENCH
+                and r.get("config", {}).get("probe") == CAL_PROBE), None)
+    if ref is None or not ref.get("score"):
+        return 1.0, "no calibration row in baseline (unscaled gate)"
+    now = measure_calibration()
+    raw = now / ref["score"]
+    scale = max(1.0 / CAL_CLAMP, min(CAL_CLAMP, raw))
+    detail = (f"machine probe {now:.1f} vs baseline {ref['score']:.1f} "
+              f"GFLOP/s -> scale {scale:.2f}"
+              + (" (clamped)" if scale != raw else ""))
+    return scale, detail
 
 
 def gate(current_path: str, baseline_path: str, threshold: float,
          metric: str = "tokens_per_s") -> int:
     with open(current_path) as f:
-        current = {_key(r): r for r in json.load(f)}
+        current = {_key(r): r for r in json.load(f) if not _skip(r)}
     with open(baseline_path) as f:
-        baseline = [r for r in json.load(f) if not _skip(r)]
+        baseline_all = json.load(f)
+    baseline = [r for r in baseline_all if not _skip(r)]
     if not baseline:
         print(f"bench_gate: {baseline_path} has no gateable rows")
         return 1
+    scale, detail = machine_scale(baseline_all)
+    print(f"bench_gate: {detail}")
     failures = []
     for ref in baseline:
         k = _key(ref)
@@ -48,10 +115,10 @@ def gate(current_path: str, baseline_path: str, threshold: float,
             failures.append(f"  missing row {k}")
             continue
         got = current[k][metric]
-        want = ref[metric]
+        want = ref[metric] * scale
         drop = 1.0 - got / want if want > 0 else 0.0
         status = "FAIL" if drop > threshold else "ok"
-        print(f"  [{status}] {k}: {got:.0f} vs baseline {want:.0f} "
+        print(f"  [{status}] {k}: {got:.0f} vs scaled baseline {want:.0f} "
               f"({-drop:+.1%})")
         if drop > threshold:
             failures.append(
@@ -66,6 +133,19 @@ def gate(current_path: str, baseline_path: str, threshold: float,
     return 0
 
 
+def update(current_path: str, baseline_path: str) -> int:
+    """Refresh the baseline from current rows + a calibration row scored
+    on THIS machine (so future gates on other machines normalize to it)."""
+    with open(current_path) as f:
+        rows = [r for r in json.load(f) if r.get("bench") != CAL_BENCH]
+    rows.append(calibration_row(measure_calibration()))
+    with open(baseline_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"bench_gate: baseline {baseline_path} updated "
+          f"({rows[-1]['score']} GFLOP/s calibration row recorded)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -76,12 +156,11 @@ def main(argv=None) -> int:
                     help="throughput field to diff "
                          "(default tokens_per_s)")
     ap.add_argument("--update", action="store_true",
-                    help="copy current over the baseline instead of gating")
+                    help="refresh the baseline from current (records a "
+                         "per-machine calibration row) instead of gating")
     args = ap.parse_args(argv)
     if args.update:
-        shutil.copyfile(args.current, args.baseline)
-        print(f"bench_gate: baseline {args.baseline} updated")
-        return 0
+        return update(args.current, args.baseline)
     return gate(args.current, args.baseline, args.threshold, args.metric)
 
 

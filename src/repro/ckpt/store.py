@@ -31,6 +31,12 @@ import numpy as np
 _SEP = "␟"      # unit-separator glyph: safe path joiner for npz keys
 
 
+class IntegrityError(ValueError):
+    """A stored artifact failed verification (sha256 mismatch, truncated
+    or unreadable blob, missing arrays). Subclasses ValueError so callers
+    that predate the typed error keep working."""
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -239,7 +245,7 @@ def load_pytree(ckpt_dir: str, name: str = "pytree",
                      or _content_hash(arrays[k]) != hashes[k])
         extra = sorted(set(arrays) - set(hashes))
         if bad or extra:
-            raise ValueError(
+            raise IntegrityError(
                 f"{path}: artifact integrity check failed — "
                 f"corrupt/missing arrays {bad[:4]}"
                 + (f", unmanifested arrays {extra[:4]}" if extra else ""))
@@ -260,6 +266,59 @@ def load_pytree(ckpt_dir: str, name: str = "pytree",
         return cache[key]
 
     return build(manifest["structure"]), manifest["meta"]
+
+
+def quarantine_artifact(ckpt_dir: str, name: str = "pytree") -> str:
+    """Move a failing artifact aside so nothing boots from it again and a
+    re-push/re-save can land cleanly at the original path. Returns the
+    quarantine path (``<name>.quarantined[-N]``, first free suffix)."""
+    src = os.path.join(ckpt_dir, name)
+    dst = src + ".quarantined"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{src}.quarantined-{n}"
+    os.rename(src, dst)
+    return dst
+
+
+def load_pytree_resilient(ckpt_dir: str, name: str = "pytree",
+                          verify: bool = True, retries: int = 2,
+                          backoff_s: float = 0.05,
+                          quarantine: bool = True) -> Tuple[Any, Dict]:
+    """``load_pytree`` with retry-with-backoff and poison quarantine.
+
+    Transient failures (a reader racing an atomic re-save, NFS hiccups)
+    heal on retry; persistent ones (bit flips, truncation — anything the
+    sha256 manifest check or the zip layer rejects) do not. After
+    ``retries`` failed re-reads the artifact directory is moved to
+    ``<name>.quarantined`` (unless ``quarantine=False``) and the last
+    ``IntegrityError`` is raised — a supervisor loop never boot-loops on
+    a poisoned artifact, and the quarantined bytes stay on disk for
+    forensics."""
+    import zipfile
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        # a missing artifact is a config error, not corruption: no retry,
+        # no quarantine, and the caller sees the standard exception
+        raise FileNotFoundError(
+            f"no artifact directory {os.path.join(ckpt_dir, name)}")
+    last: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        if attempt:
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+        try:
+            return load_pytree(ckpt_dir, name=name, verify=verify)
+        except (IntegrityError, OSError, zipfile.BadZipFile,
+                json.JSONDecodeError, KeyError) as e:
+            last = e
+    where = os.path.join(ckpt_dir, name)
+    if quarantine and os.path.exists(where):
+        where = quarantine_artifact(ckpt_dir, name)
+    raise IntegrityError(
+        f"artifact {os.path.join(ckpt_dir, name)} failed to load after "
+        f"{retries + 1} attempts"
+        + (f"; quarantined at {where}" if quarantine else "")
+        + f" — last error: {last}") from last
 
 
 class AsyncCheckpointer:

@@ -631,14 +631,24 @@ def save_plan(ckpt_dir: str, list_params: Params, plan: Plan,
 
 
 def load_plan(ckpt_dir: str, cfg: Optional[ModelConfig] = None,
-              verify: bool = False) -> Tuple[Params, Plan]:
+              verify: bool = False, retries: int = 0,
+              quarantine: bool = False) -> Tuple[Params, Plan]:
     """Load a compressed artifact saved by ``save_plan``. If ``cfg`` is
     given, its fingerprint must match the one recorded at save time.
     ``verify=True`` re-hashes every stored array against the manifest
-    content hashes before booting (see ``store.load_pytree``)."""
+    content hashes before booting (see ``store.load_pytree``).
+    ``retries > 0`` re-reads with exponential backoff on transient/
+    integrity failures and, with ``quarantine=True``, moves a
+    persistently failing artifact to ``<name>.quarantined`` before
+    raising ``store.IntegrityError`` (serve.py ``--load-retries``)."""
     from repro.ckpt import store
-    params, meta = store.load_pytree(ckpt_dir, name=ARTIFACT_NAME,
-                                     verify=verify)
+    if retries > 0 or quarantine:
+        params, meta = store.load_pytree_resilient(
+            ckpt_dir, name=ARTIFACT_NAME, verify=verify, retries=retries,
+            quarantine=quarantine)
+    else:
+        params, meta = store.load_pytree(ckpt_dir, name=ARTIFACT_NAME,
+                                         verify=verify)
     plan = Plan.from_json(json.dumps(meta["plan"]))
     if cfg is not None and "model" in meta:
         want = _model_fingerprint(cfg)
@@ -647,6 +657,89 @@ def load_plan(ckpt_dir: str, cfg: Optional[ModelConfig] = None,
                 f"compressed checkpoint was built for {meta['model']}, "
                 f"got config {want}")
     return params, plan
+
+
+# ---------------------------------------------------------------------------
+# Serve-time elastic rank: pow2 bucket ladder over the saved factors
+# ---------------------------------------------------------------------------
+def _pow2_ceil(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def rank_bucket(r: int, level: int, min_rank: int = 1) -> int:
+    """Rank served at degradation ``level`` for a factor of full rank
+    ``r``: level 0 is the exact allocated rank; level ℓ ≥ 1 serves
+    ``pow2_ceil(r) >> ℓ`` (clamped to [min_rank, r]) — roughly a halving
+    per level, always a power of two, so the whole ladder compiles at
+    most ``levels`` extra decode executables regardless of how many
+    distinct allocated ranks the plan produced."""
+    if level <= 0:
+        return r
+    return max(min_rank, min(r, _pow2_ceil(r) >> level))
+
+
+def slice_rank_ladder(list_params: Params, levels: int = 2,
+                      min_rank: int = 1) -> List[Params]:
+    """Slice a factorized params tree into a serve-time degradation
+    ladder (ISSUE 6 / ROADMAP "elastic serve-time rank").
+
+    The factors are singular-value-ordered (B's columns / C's rows come
+    out of the whitened SVD sorted by descending σ), so ``B[..., :k']``
+    / ``C[..., :k', :]`` IS the optimal rank-k' truncation of the same
+    decomposition — one saved artifact serves any rank ≤ k with a plain
+    slice, no re-SVD, no retrace of anything but the (bounded) new factor
+    shapes. Returns ``[full, level1, ..., levelN]`` where level ℓ slices
+    every factorized linear to ``rank_bucket(r, ℓ)``:
+
+    * level 0 is ``list_params`` ITSELF (same array objects), so the
+      full-rank rung is token-identical to the pre-ladder engine by
+      construction;
+    * shared bases stay shared: a basis B reused across a group's layers
+      is sliced once per (array, rank) and re-aliased, preserving the
+      checkpoint dedup in every rung;
+    * dense (``w``) linears, biases, LoRA adapters, norms are passed
+      through by reference — the ladder only views factor prefixes, it
+      copies nothing but slice views.
+
+    Note: a ``refine=True`` coefficient matrix is optimal at its full
+    rank, not per prefix; sliced rungs of a refined artifact are still
+    valid low-rank approximations (B is unchanged), just not the refined
+    optimum at the lower rank.
+    """
+    ladder = [list_params]
+    for lvl in range(1, levels + 1):
+        sliced_b: Dict[Tuple[int, int], jax.Array] = {}
+
+        def walk(node, lvl=lvl, sliced_b=sliced_b):
+            if isinstance(node, dict):
+                if "B" in node and "C" in node:
+                    B, C = node["B"], node["C"]
+                    r = int(B.shape[-1])
+                    k = rank_bucket(r, lvl, min_rank)
+                    out = dict(node)
+                    if k < r:
+                        key = (id(B), k)
+                        if key not in sliced_b:
+                            sliced_b[key] = B[..., :k]
+                        out["B"] = sliced_b[key]
+                        out["C"] = C[..., :k, :]
+                    return out
+                return {kk: walk(v) for kk, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            if isinstance(node, tuple):
+                return tuple(walk(v) for v in node)
+            return node
+
+        rung = walk(list_params)
+        # a level that sliced nothing (dense tree, or every rank already
+        # at its bucket) is the full tree — alias it so callers can
+        # detect a degenerate ladder by identity
+        ladder.append(rung if sliced_b else list_params)
+    return ladder
 
 
 def compressed_param_count(list_params: Params) -> int:

@@ -12,6 +12,14 @@ latency/throughput.
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
         --compressed-ckpt runs/mini_drank30 --verify --requests 16 \
         --n-new 32
+
+    # resilient serving: bounded queue, deadlines, elastic-rank
+    # degradation, liveness heartbeats, structured metrics — and a
+    # deterministic fault plan for chaos drills (DESIGN.md §5)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
+        --requests 32 --max-queue 16 --deadline-s 30 --elastic \
+        --watchdog-s 60 --heartbeat-dir runs/hb \
+        --fault-plan '{"nan_decode_step": 3}' --stats-json runs/serve.json
 """
 from __future__ import annotations
 
@@ -76,6 +84,42 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--n-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    # --- resilience (DESIGN.md §5) ----------------------------------------
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the wait queue; submits past the bound "
+                         "are rejected with backpressure (0 = unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline; requests still "
+                         "queued past it are deterministically shed")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="poison-quarantine re-queue budget before a "
+                         "request fails typed")
+    ap.add_argument("--elastic", action="store_true",
+                    help="serve-time elastic rank: degrade factorized "
+                         "decode rank to pow2 buckets under queue "
+                         "pressure, restore when drained")
+    ap.add_argument("--elastic-levels", type=int, default=2,
+                    help="with --elastic: degraded rank buckets below "
+                         "full rank")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="drain watchdog: report the run as stalled "
+                         "after this long without forward progress")
+    ap.add_argument("--heartbeat-dir", default="",
+                    help="beat a liveness heartbeat file here every "
+                         "engine step (dist.ft; readable by "
+                         "detect_stalled / StallDetector)")
+    ap.add_argument("--fault-plan", default="",
+                    help="inject deterministic faults: a JSON FaultPlan "
+                         "or @path/to/plan.json (dist.faultinject; "
+                         "chaos drills only)")
+    ap.add_argument("--load-retries", type=int, default=0,
+                    help="with --compressed-ckpt: retry a transiently "
+                         "failing load with backoff, quarantining the "
+                         "artifact if it keeps failing integrity")
+    ap.add_argument("--stats-json", default="",
+                    help="write the structured serve-metrics dict "
+                         "(queue/shed/retry counters, TTFT percentiles, "
+                         "rank-bucket residency) to this path")
     args = ap.parse_args(argv)
 
     from repro.ckpt import store
@@ -83,14 +127,35 @@ def main(argv=None) -> int:
     from repro.core import compress as CC
     from repro.data.synthetic import DataConfig, calibration_batches
     from repro.models import transformer as T
+    from repro.serve import admission as adm
     from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
     from repro.train import step as TS
 
     cfg = get_config(args.arch)
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
+    acfg = adm.AdmissionConfig(max_queue=args.max_queue,
+                               default_deadline_s=args.deadline_s,
+                               max_retries=args.max_retries,
+                               elastic=args.elastic,
+                               elastic_levels=args.elastic_levels)
+    faults = None
+    if args.fault_plan:
+        from repro.dist.faultinject import FaultPlan
+        faults = FaultPlan.from_json(args.fault_plan)
+        print(f"fault plan armed: {faults.to_json()}")
+    heartbeat = None
+    if args.heartbeat_dir:
+        import os
+
+        from repro.dist.ft import Heartbeat
+        heartbeat = Heartbeat(os.path.join(args.heartbeat_dir,
+                                           "worker0.json"), fault=faults)
+    resil = dict(admission=acfg, faults=faults, heartbeat=heartbeat)
     if args.compressed_ckpt:
-        cb = ContinuousBatcher.from_compressed(args.compressed_ckpt, cfg,
-                                               scfg, verify=args.verify)
+        cb = ContinuousBatcher.from_compressed(
+            args.compressed_ckpt, cfg, scfg, verify=args.verify,
+            retries=args.load_retries, quarantine=args.load_retries > 0,
+            **resil)
         print(f"booted from compressed checkpoint {args.compressed_ckpt} "
               f"({cb.plan.summary['achieved_ratio']:.1%} removed, "
               f"method={cb.plan.config.method}"
@@ -162,28 +227,48 @@ def main(argv=None) -> int:
             if args.save_compressed:
                 path = CC.save_plan(args.save_compressed, params, plan, cfg)
                 print(f"saved compressed artifact to {path}")
-        cb = ContinuousBatcher(params, cfg, scfg)
+        cb = ContinuousBatcher(params, cfg, scfg, **resil)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
+    accepted = 0
     for i in range(args.requests):
-        cb.submit(Request(
+        accepted += cb.submit(Request(
             rid=i,
             tokens=rng.integers(0, cfg.vocab_size,
                                 size=(args.prompt_len,), dtype=np.int32),
             n_new=args.n_new))
-    done = cb.run_until_drained()
+    if accepted < args.requests:
+        print(f"backpressure: {args.requests - accepted}/{args.requests} "
+              f"requests rejected at submit (--max-queue {args.max_queue})")
+    done = cb.run_until_drained(watchdog_s=args.watchdog_s)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
     lat = [r.t_done - r.t_submit for r in done]
-    print(json.dumps({
+    report = {
+        "drain_status": done.status,   # drained | timeout | stalled
         "requests": len(done),
+        "shed": len(done.shed),
+        "rejected": len(done.rejected),
+        "failed": len(done.failed),
         "generated_tokens": toks,
-        "tokens_per_s": round(toks / dt, 1),
-        "mean_latency_s": round(float(np.mean(lat)), 3),
-        "p95_latency_s": round(float(np.percentile(lat, 95)), 3),
+        "tokens_per_s": round(toks / dt, 1) if toks else 0.0,
+        "mean_latency_s": round(float(np.mean(lat)), 3) if lat else 0.0,
+        "p95_latency_s": (round(float(np.percentile(lat, 95)), 3)
+                          if lat else 0.0),
         "engine_stats": cb.stats,     # jit retraces, admissions
-    }, indent=1))
-    return 0
+    }
+    print(json.dumps(report, indent=1))
+    if done.status != "drained":
+        undone = [r.rid for r in done.undrained]
+        print(f"WARNING: drain ended '{done.status}' with "
+              f"{len(undone)} requests unfinished: {undone[:8]}")
+    for r in done.failed:
+        print(f"FAILED rid={r.rid}: {r.error}")
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(cb.metrics(), f, indent=1)
+        print(f"serve metrics written to {args.stats_json}")
+    return 0 if done.status == "drained" else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,185 @@
+"""Admission control for the continuous batcher (DESIGN.md §5).
+
+The batcher's intake used to be an unbounded list: every ``submit``
+succeeded, nothing ever aged out, and an operator had no signal before
+the process OOMed or latency SLOs silently died. This module makes the
+intake an explicit, deterministic policy object:
+
+* **bounded queue with backpressure** — ``offer`` accepts or rejects
+  against ``max_queue``; the caller (router, load balancer) sees the
+  reject immediately and can spill to another replica.
+* **per-request deadlines** — a request carries ``deadline_s`` (relative
+  to submit). ``take`` sheds overdue requests *at admission time*, in
+  FIFO order, before they waste a prefill: shedding work that already
+  missed its SLO is the deterministic policy (no sampling, no load
+  heuristics — two identical runs shed identical sets).
+* **serve metrics** — one structured dict (queue depth/peak, shed and
+  poison counters, TTFT and queue-wait percentiles, rank-bucket
+  residency) shared by the engine, the degradation benchmark, the chaos
+  tests and ``launch/serve.py --stats-json``, so tests assert on exactly
+  the counters operators watch.
+
+Typed request terminal states live here too: a request ends exactly one
+of ``done`` / ``shed_queue_full`` / ``shed_deadline`` / ``failed_poison``
+(the poisoned path raises/records ``PoisonedRequestError``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Terminal request statuses (Request.status)
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+SHED_QUEUE_FULL = "shed_queue_full"
+SHED_DEADLINE = "shed_deadline"
+FAILED_POISON = "failed_poison"
+
+
+class PoisonedRequestError(RuntimeError):
+    """A request kept producing non-finite logits after exhausting its
+    quarantine retry budget (persistent content poison or a persistently
+    faulty engine)."""
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    max_queue: int = 0           # queued-request bound; 0 = unbounded
+    default_deadline_s: Optional[float] = None  # applied when a request
+    #                              carries no deadline of its own
+    max_retries: int = 2         # poison-quarantine re-queue budget
+    # --- elastic-rank degradation ladder ---------------------------------
+    elastic: bool = False        # enable serve-time rank degradation
+    elastic_levels: int = 2      # degraded pow2 buckets below full rank
+    degrade_above: int = 4       # queue depth that drops one rank level
+    restore_below: int = 1       # queue depth that restores one level
+
+
+class ServeMetrics:
+    """Counters + latency samples behind ``ContinuousBatcher.metrics()``."""
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "accepted": 0, "completed": 0,
+            "shed_queue_full": 0, "shed_deadline": 0,
+            "poison_events": 0, "poison_retries": 0, "poison_failures": 0,
+            "slot_purges": 0, "steps": 0, "peak_queue_depth": 0,
+        }
+        self.ttft_s: List[float] = []        # submit -> first token
+        self.queue_wait_s: List[float] = []  # submit -> admission
+        self.rank_residency: Dict[int, int] = {}   # level -> steps spent
+
+    def bump(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def observe_queue_depth(self, depth: int) -> None:
+        if depth > self.counters["peak_queue_depth"]:
+            self.counters["peak_queue_depth"] = depth
+
+    def step_at_level(self, level: int) -> None:
+        self.counters["steps"] += 1
+        self.rank_residency[level] = self.rank_residency.get(level, 0) + 1
+
+    @staticmethod
+    def _pcts(samples: List[float]) -> Dict[str, float]:
+        if not samples:
+            return {"p50_ms": 0.0, "p95_ms": 0.0, "mean_ms": 0.0, "n": 0}
+        a = np.asarray(samples) * 1e3
+        return {"p50_ms": round(float(np.percentile(a, 50)), 3),
+                "p95_ms": round(float(np.percentile(a, 95)), 3),
+                "mean_ms": round(float(a.mean()), 3), "n": len(a)}
+
+    def snapshot(self, queue_depth: int, rank_level: int,
+                 engine_stats: Optional[Dict[str, int]] = None) -> Dict:
+        """The serve-metrics dict: everything an operator would watch.
+        ``engine_stats`` folds in the batcher's jit-retrace counters."""
+        out: Dict = dict(self.counters)
+        out["queue_depth"] = queue_depth
+        out["rank_level"] = rank_level
+        out["rank_residency"] = {str(k): v for k, v in
+                                 sorted(self.rank_residency.items())}
+        out["ttft"] = self._pcts(self.ttft_s)
+        out["queue_wait"] = self._pcts(self.queue_wait_s)
+        if engine_stats:
+            out["engine"] = dict(engine_stats)
+        return out
+
+
+class AdmissionController:
+    """Owns the wait queue; all accept/shed decisions happen here.
+
+    Determinism contract: decisions depend only on (submission order,
+    queue bound, request deadlines, the ``now`` values the engine passes
+    in). Two runs that submit the same requests in the same order against
+    the same config shed/reject the same rids — asserted by the chaos
+    suite.
+    """
+
+    def __init__(self, cfg: AdmissionConfig, metrics: ServeMetrics):
+        self.cfg = cfg
+        self.metrics = metrics
+        self.queue: List = []          # waiting Requests, FIFO
+        self.rejected: List = []       # shed at submit (queue full)
+        self.shed: List = []           # shed while queued (deadline)
+
+    def depth(self) -> int:
+        return len(self.queue)
+
+    def offer(self, req, now: float) -> bool:
+        """Admit ``req`` to the wait queue or reject it (backpressure).
+        Returns True iff accepted; a reject marks the request
+        ``shed_queue_full`` and keeps it in ``rejected``."""
+        self.metrics.bump("submitted")
+        req.t_submit = now
+        if req.deadline_s is None:
+            req.deadline_s = self.cfg.default_deadline_s
+        if self.cfg.max_queue and len(self.queue) >= self.cfg.max_queue:
+            req.status = SHED_QUEUE_FULL
+            self.metrics.bump("shed_queue_full")
+            self.rejected.append(req)
+            return False
+        req.status = QUEUED
+        self.metrics.bump("accepted")
+        self.queue.append(req)
+        self.metrics.observe_queue_depth(len(self.queue))
+        return True
+
+    def requeue(self, req) -> None:
+        """Put a quarantined request back at the head of the queue (it
+        already waited its turn; retrying behind the backlog would let
+        one transient fault double a request's latency)."""
+        req.status = QUEUED
+        self.queue.insert(0, req)
+        self.metrics.observe_queue_depth(len(self.queue))
+
+    def take(self, n: int, now: float) -> Tuple[List, List]:
+        """Dequeue up to ``n`` admissible requests; shed overdue ones.
+
+        Walks the queue in FIFO order: a request whose deadline has
+        already passed while waiting is shed (``shed_deadline``) — it can
+        no longer meet its SLO, and prefilling it would only push the
+        requests behind it over theirs. Returns (admitted, shed)."""
+        admitted: List = []
+        shed: List = []
+        keep: List = []
+        for req in self.queue:
+            overdue = (req.deadline_s is not None
+                       and now - req.t_submit > req.deadline_s)
+            if overdue:
+                req.status = SHED_DEADLINE
+                shed.append(req)
+            elif len(admitted) < n:
+                req.status = RUNNING
+                req.t_admit = now
+                self.metrics.queue_wait_s.append(now - req.t_submit)
+                admitted.append(req)
+            else:
+                keep.append(req)
+        self.queue[:] = keep
+        if shed:
+            self.metrics.bump("shed_deadline", len(shed))
+            self.shed.extend(shed)
+        return admitted, shed

@@ -1,5 +1,5 @@
 """Serving: jitted prefill + single-token decode steps and a slot-based
-continuous-batching driver.
+continuous-batching driver, with a resilience layer (DESIGN.md §5).
 
 The engine keeps a fixed pool of `batch` decode slots. Requests are admitted
 into free slots (their prompt prefilled into that slot's cache region) and
@@ -7,13 +7,39 @@ retired when they emit `n_new` tokens; every decode step advances ALL active
 slots at once (per-sequence positions — the cache layer supports (B,)
 position vectors). Works identically for dense, compressed (factorized),
 full-KV, sliding-window, SSM-state and enc-dec models.
+
+Resilience (all opt-in via ``AdmissionConfig`` / constructor kwargs, the
+default construction behaves exactly like the pre-resilience engine):
+
+* **admission control** — bounded queue with explicit backpressure
+  (``submit`` returns accept/reject), per-request deadlines shed overdue
+  work before it wastes a prefill (``serve.admission``).
+* **poison quarantine** — every prefill/decode emits through a finite
+  guard; non-finite logits rows are attributed (bisected when ambiguous),
+  their slots purged (cache row zeroed so later tenants of the slot can
+  never attend into poisoned state), and the requests re-queued under a
+  bounded retry budget, then failed with a typed error. Healthy slots
+  never see a poisoned token.
+* **elastic-rank degradation** — with ``elastic=True`` and factorized
+  params, the batcher holds a pow2 rank-bucket ladder
+  (``compress.slice_rank_ladder``) and drops decode rank under queue
+  pressure instead of shedding, restoring it as the queue drains.
+  Retrace-free beyond one compile per rung: the KV cache layout is
+  rank-independent, so switching rungs just swaps the weight pytree.
+* **liveness** — ``run_until_drained`` returns a ``DrainResult`` whose
+  ``status`` distinguishes drained / timeout / stalled (watchdog on
+  forward progress), and the step loop beats a ``dist.ft.Heartbeat``.
+* **fault injection** — a ``dist.faultinject.FaultPlan`` drives
+  seed-deterministic NaN/latency/heartbeat faults through the exact same
+  code paths production faults would take (chaos suite:
+  tests/test_resilience.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +48,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import transformer as T
 from repro.models.params import Params
+from repro.serve import admission as adm
 
 
 @dataclass(frozen=True)
@@ -40,6 +67,36 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_done: float = 0.0
+    # --- resilience fields (serve.admission / quarantine) -----------------
+    deadline_s: Optional[float] = None   # relative to submit; None = none
+    status: str = adm.QUEUED
+    retries: int = 0              # poison-quarantine attempts consumed
+    t_admit: float = 0.0
+    t_first: float = 0.0          # first token emitted (TTFT anchor)
+    error: Optional[str] = None   # set on typed failure
+
+
+class DrainResult(list):
+    """``run_until_drained`` result: a list of completed requests (so the
+    historical ``done = cb.run_until_drained()`` callers keep working)
+    plus the drain verdict.
+
+    ``status`` is ``"drained"`` (queue empty, all slots free),
+    ``"timeout"`` (``max_steps`` exhausted with work still pending) or
+    ``"stalled"`` (the watchdog saw no forward progress — tokens, shed or
+    terminal transitions — for ``watchdog_s``). ``undrained`` lists the
+    requests still queued or running; ``shed``/``rejected``/``failed``
+    surface the terminal non-success populations."""
+
+    def __init__(self, done: List[Request], status: str,
+                 undrained: List[Request], shed: List[Request],
+                 rejected: List[Request], failed: List[Request]):
+        super().__init__(done)
+        self.status = status
+        self.undrained = undrained
+        self.shed = shed
+        self.rejected = rejected
+        self.failed = failed
 
 
 class Engine:
@@ -55,12 +112,17 @@ class Engine:
 
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
-                        scfg: ServeConfig, verify: bool = False) -> "Engine":
+                        scfg: ServeConfig, verify: bool = False,
+                        retries: int = 0,
+                        quarantine: bool = False) -> "Engine":
         """Boot directly from a ``compress.save_plan`` artifact — no
         calibration or SVD at serve time; the factorized list-form params
         drop straight into the model code. ``verify=True`` re-hashes the
         stored arrays against the manifest content hashes first
-        (``launch/serve.py --verify``).
+        (``launch/serve.py --verify``). ``retries``/``quarantine``
+        retry-with-backoff a transiently failing load and move a
+        persistently sha256-failing artifact aside before raising a typed
+        ``store.IntegrityError`` (``--load-retries``).
 
         Example (boot from an artifact and generate; continues the
         ``compress.save_plan`` example)::
@@ -87,7 +149,8 @@ class Engine:
             (2, 3)
         """
         from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify)
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify,
+                                    retries=retries, quarantine=quarantine)
         eng = cls(params, cfg, scfg)
         eng.plan = plan
         return eng
@@ -195,27 +258,54 @@ class ContinuousBatcher:
 
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
-                        scfg: ServeConfig,
-                        verify: bool = False) -> "ContinuousBatcher":
+                        scfg: ServeConfig, verify: bool = False,
+                        retries: int = 0, quarantine: bool = False,
+                        **kwargs) -> "ContinuousBatcher":
         """Boot the batcher from a saved compressed checkpoint (see
-        ``Engine.from_compressed``; ``verify`` checks content hashes)."""
+        ``Engine.from_compressed``; ``verify`` checks content hashes,
+        ``retries``/``quarantine`` make the load resilient). Extra
+        kwargs (``admission``, ``faults``, ``heartbeat``) pass through to
+        the constructor."""
         from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify)
-        cb = cls(params, cfg, scfg)
+        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify,
+                                    retries=retries, quarantine=quarantine)
+        cb = cls(params, cfg, scfg, **kwargs)
         cb.plan = plan
         return cb
 
-    def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig):
+    def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig,
+                 admission: Optional[adm.AdmissionConfig] = None,
+                 faults=None, heartbeat=None):
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.plan = None
+        self.acfg = admission or adm.AdmissionConfig()
+        self.faults = faults          # dist.faultinject.FaultPlan or None
+        self.heartbeat = heartbeat    # dist.ft.Heartbeat or None
         self.cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.slots: List[Optional[Request]] = [None] * scfg.batch
         self.tokens = jnp.zeros((scfg.batch, 1), dtype=jnp.int32)
-        self.queue: List[Request] = []
         self.done: List[Request] = []
+        self.failed: List[Request] = []
+        self._metrics = adm.ServeMetrics()
+        self.admission = adm.AdmissionController(self.acfg, self._metrics)
+        self._step_idx = 0
+        self._progress = 0            # bumps on any forward progress
         kinds = {k for k, _ in cfg.layer_runs()}
         self.bucketed = (kinds <= {"attn", "swa"}
                          and not cfg.is_encoder_decoder)
+        # elastic-rank ladder: rung 0 is self.params ITSELF (token-identical
+        # to the pre-ladder engine); rung ℓ slices the singular-value-
+        # ordered factors to the pow2 bucket pow2_ceil(k) >> ℓ. Dense
+        # params have no factors to slice — the ladder stays length 1.
+        self.level = 0
+        if self.acfg.elastic:
+            from repro.core.compress import slice_rank_ladder
+            self.ladder = slice_rank_ladder(params,
+                                            levels=self.acfg.elastic_levels)
+            if len(self.ladder) > 1 and self.ladder[1] is params:
+                self.ladder = [params]
+        else:
+            self.ladder = [params]
         self.stats: Dict[str, int] = {
             "prefill_retraces": 0, "decode_retraces": 0,
             "scatter_retraces": 0, "admissions": 0, "admitted": 0,
@@ -235,20 +325,49 @@ class ContinuousBatcher:
             self.stats["scatter_retraces"] += 1
             return _scatter_rows(pool, src, slots)
 
+        def _purge_fn(pool, rows):
+            # zero cache rows + positions of quarantined slots so the
+            # next tenant (or a masked-out dead region) can never attend
+            # into poisoned state; rows >= batch are padding (dropped)
+            runs = jax.tree.map(
+                lambda leaf: leaf.at[:, rows].set(0, mode="drop"),
+                pool["runs"])
+            pos = pool["pos"].at[rows].set(0, mode="drop")
+            return {"runs": runs, "pos": pos}
+
         self._decode = jax.jit(_decode_fn)
         self._prefill1 = jax.jit(_prefill_fn)
         self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
+        self._purge = jax.jit(_purge_fn, donate_argnums=(0,))
 
-    def submit(self, req: Request) -> None:
-        req.t_submit = time.perf_counter()
-        self.queue.append(req)
+    # ---- intake ----------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.admission.queue
 
+    def submit(self, req: Request) -> bool:
+        """Offer a request. Returns True iff admitted to the wait queue;
+        False means backpressure (queue at ``max_queue`` — the request is
+        marked ``shed_queue_full`` and kept in ``admission.rejected``)."""
+        return self.admission.offer(req, time.perf_counter())
+
+    def _params_now(self) -> Params:
+        return self.ladder[self.level]
+
+    def _adjust_rank_level(self) -> None:
+        depth = len(self.queue)
+        if (depth >= self.acfg.degrade_above
+                and self.level < len(self.ladder) - 1):
+            self.level += 1
+        elif depth <= self.acfg.restore_below and self.level > 0:
+            self.level -= 1
+
+    # ---- admission -------------------------------------------------------
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
-        n = min(len(free), len(self.queue))
-        if not n:
+        admit, _ = self.admission.take(len(free), time.perf_counter())
+        if not admit:
             return
-        admit, self.queue = self.queue[:n], self.queue[n:]
         for req in admit:
             # cache rows hold prompt + generated tokens: an over-long
             # prompt keeps its newest max_len-1 tokens (degrade, not crash)
@@ -256,15 +375,26 @@ class ContinuousBatcher:
             if len(req.tokens) > keep:
                 req.tokens = req.tokens[-keep:]
         if self.bucketed:
-            self._admit_batched(admit, free[:n])
+            self._admit_batched(admit, free[:len(admit)])
         else:
             for req, slot in zip(admit, free):
                 self._admit_exact(req, slot)
         self.stats["admissions"] += 1
-        self.stats["admitted"] += n
+        self.stats["admitted"] += len(admit)
+
+    def _poison_rid_rows(self, reqs: Sequence[Request],
+                         last: np.ndarray) -> None:
+        """Persistent content-poison injection (FaultPlan.poison_rids):
+        corrupt the host-side logits row of marked requests."""
+        if self.faults is None:
+            return
+        for j, req in enumerate(reqs):
+            if req is not None and self.faults.rid_is_poison(req.rid):
+                last[j] = np.nan
 
     def _admit_batched(self, admit: List[Request], free: List[int]) -> None:
-        """All admitted prompts in ONE fixed-batch bucketed prefill."""
+        """All admitted prompts in ONE fixed-batch bucketed prefill,
+        emitted through the finite guard."""
         B = self.scfg.batch
         Sb = _bucket_len(max(len(r.tokens) for r in admit),
                          self.scfg.max_len)
@@ -276,50 +406,255 @@ class ContinuousBatcher:
             lens[j] = len(req.tokens)
             slots[j] = slot
         logits, c1 = self._prefill1(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "lengths": jnp.asarray(lens)})
+            self._params_now(), {"tokens": jnp.asarray(toks),
+                                 "lengths": jnp.asarray(lens)})
         self.cache = self._scatter(self.cache, c1, jnp.asarray(slots))
-        tok = np.asarray(jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+        last = np.array(logits[:, -1])                 # (B, V) writable host copy
+        if self.faults is not None:
+            for j in self.faults.prefill_rows_to_poison(
+                    self.stats["admissions"], len(admit)):
+                last[j] = np.nan
+        self._poison_rid_rows(admit + [None] * (B - len(admit)), last)
+        finite = np.isfinite(last).all(axis=-1)
+        tok = last.argmax(-1).astype(np.int32)
+        tok[~finite] = 0
         self.tokens = self.tokens.at[jnp.asarray(slots), 0].set(
             jnp.asarray(tok), mode="drop")
+        bad: List[int] = []
+        now = time.perf_counter()
         for j, (req, slot) in enumerate(zip(admit, free)):
-            req.out.append(int(tok[j]))
-            self.slots[slot] = req
+            if finite[j]:
+                req.out.append(int(tok[j]))
+                req.t_first = req.t_first or now
+                self._metrics.ttft_s.append(now - req.t_submit)
+                self.slots[slot] = req
+                self._progress += 1
+            else:
+                bad.append(j)
+        if bad:
+            ambiguous = len(bad) == len(admit) and len(admit) > 1
+            self._purge_slots([free[j] for j in bad])
+            self._quarantine([admit[j] for j in bad], ambiguous)
 
     def _admit_exact(self, req: Request, slot: int) -> None:
         """Exact-length single-row admission (recurrent-state archs)."""
         logits, c1 = self._prefill1(
-            self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
+            self._params_now(), {"tokens": jnp.asarray(req.tokens[None, :])})
         self.cache = self._scatter(self.cache, c1,
                                    jnp.asarray([slot], dtype=np.int32))
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        req.out.append(int(tok[0]))
-        self.tokens = self.tokens.at[slot, 0].set(tok[0])
+        last = np.array(logits[:, -1])
+        self._poison_rid_rows([req], last)
+        if not np.isfinite(last[0]).all():
+            self._purge_slots([slot])
+            self._quarantine([req], ambiguous=False)
+            return
+        t = int(last[0].argmax())
+        req.out.append(t)
+        now = time.perf_counter()
+        req.t_first = req.t_first or now
+        self._metrics.ttft_s.append(now - req.t_submit)
+        self.tokens = self.tokens.at[slot, 0].set(t)
         self.slots[slot] = req
+        self._progress += 1
 
+    # ---- poison quarantine -----------------------------------------------
+    def _purge_slots(self, rows: List[int]) -> None:
+        """Zero the cache rows + next-token entries of quarantined slots."""
+        B = self.scfg.batch
+        pad = np.full((B,), B, dtype=np.int32)
+        pad[:len(rows)] = rows
+        jrows = jnp.asarray(pad)
+        self.cache = self._purge(self.cache, jrows)
+        self.tokens = self.tokens.at[jrows, 0].set(0, mode="drop")
+        self._metrics.bump("slot_purges", len(rows))
+
+    def _probe(self, reqs: List[Request]) -> np.ndarray:
+        """Replay each suspect's (prompt + emitted tokens) in isolation —
+        one bucketed prefill, no cache writes — and report per-row
+        finiteness. Reuses the admission prefill executables, so probing
+        adds no new traces."""
+        self._metrics.bump("poison_probes")
+        seqs = []
+        keep = self.scfg.max_len - 1
+        for r in reqs:
+            s = np.concatenate([np.asarray(r.tokens, dtype=np.int32),
+                                np.asarray(r.out, dtype=np.int32)])
+            seqs.append(s[-keep:])
+        if self.bucketed:
+            B = self.scfg.batch
+            Sb = _bucket_len(max(len(s) for s in seqs), self.scfg.max_len)
+            toks = np.zeros((B, Sb), dtype=np.int32)
+            lens = np.ones((B,), dtype=np.int32)
+            for j, s in enumerate(seqs):
+                toks[j, :len(s)] = s
+                lens[j] = len(s)
+            logits, _ = self._prefill1(
+                self._params_now(), {"tokens": jnp.asarray(toks),
+                                     "lengths": jnp.asarray(lens)})
+            last = np.array(logits[:, -1])
+            self._poison_rid_rows(reqs + [None] * (B - len(reqs)), last)
+            return np.isfinite(last).all(axis=-1)[:len(reqs)]
+        verdict = np.zeros((len(reqs),), dtype=bool)
+        for j, s in enumerate(seqs):
+            logits, _ = self._prefill1(self._params_now(),
+                                       {"tokens": jnp.asarray(s[None, :])})
+            last = np.array(logits[:, -1])
+            self._poison_rid_rows([reqs[j]], last)
+            verdict[j] = bool(np.isfinite(last[0]).all())
+        return verdict
+
+    def _bisect_poison(self, reqs: List[Request]
+                       ) -> tuple[List[Request], List[Request]]:
+        """Attribute an ambiguous (every-live-row non-finite) poison event
+        to the offending request(s) by bisection: replay suspects in
+        isolation; a subset that still comes back all-bad splits in half
+        until single offenders remain. Returns (offenders, collateral)."""
+        verdict = self._probe(reqs)
+        if verdict.all():
+            return [], list(reqs)
+        if not verdict.any() and len(reqs) > 1:
+            mid = len(reqs) // 2
+            o1, c1 = self._bisect_poison(reqs[:mid])
+            o2, c2 = self._bisect_poison(reqs[mid:])
+            return o1 + o2, c1 + c2
+        offenders = [r for r, ok in zip(reqs, verdict) if not ok]
+        collateral = [r for r, ok in zip(reqs, verdict) if ok]
+        return offenders, collateral
+
+    def _quarantine(self, reqs: List[Request], ambiguous: bool) -> None:
+        """Evict poisoned requests: re-queue (front, retry budget) or fail
+        typed. ``ambiguous=True`` means every live row was non-finite at
+        once — bisect to the offender(s) first; proven-healthy collateral
+        re-queues without consuming its retry budget, but only when an
+        actual offender was identified (otherwise the event was a
+        transient engine fault and everyone pays one retry, so a
+        persistently faulty engine still terminates typed instead of
+        looping forever)."""
+        self._metrics.bump("poison_events")
+        offenders, collateral = (self._bisect_poison(reqs) if ambiguous
+                                 else (list(reqs), []))
+        if not offenders:       # transient: no culprit to exonerate against
+            charge, collateral = collateral, []
+        else:
+            charge = offenders
+        for req in collateral:
+            req.out = []
+            req.t_first = 0.0
+            self.admission.requeue(req)
+        for req in charge:
+            req.retries += 1
+            self._metrics.bump("poison_retries")
+            if req.retries > self.acfg.max_retries:
+                req.status = adm.FAILED_POISON
+                req.error = (f"non-finite logits after {req.retries} "
+                             f"attempts (retry budget "
+                             f"{self.acfg.max_retries})")
+                req.t_done = time.perf_counter()
+                self.failed.append(req)
+                self._metrics.bump("poison_failures")
+                self._progress += 1          # terminal transition
+            else:
+                req.out = []
+                req.t_first = 0.0
+                self.admission.requeue(req)
+
+    # ---- step loop -------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit + one decode step for all live slots.
-        Returns the number of live slots stepped."""
+        """One engine iteration: beat liveness, shed overdue work, admit,
+        one decode step for all live slots through the finite guard.
+        Returns the number of healthy live slots stepped."""
+        idx = self._step_idx
+        self._step_idx += 1
+        if self.heartbeat is not None:
+            self.heartbeat.beat(idx)
+        if self.faults is not None:
+            if self.faults.wedged(idx):
+                return 0                     # hung engine: no progress
+            stall = self.faults.stall_for(idx)
+            if stall:
+                time.sleep(stall)
+        self._adjust_rank_level()
+        self._metrics.step_at_level(self.level)
+        self._metrics.observe_queue_depth(len(self.queue))
         self._admit()
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
+        logits, self.cache = self._decode(self._params_now(), self.cache,
                                           self.tokens)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        self.tokens = nxt[:, None]
-        for i in live:
+        last = np.array(logits[:, -1])                 # (B, V) writable host copy
+        if self.faults is not None:
+            for row in self.faults.decode_rows_to_poison(idx, live):
+                last[row] = np.nan
+        self._poison_rid_rows(self.slots, last)
+        finite = np.isfinite(last).all(axis=-1)
+        nxt = last.argmax(-1).astype(np.int32)
+        good = [i for i in live if finite[i]]
+        bad = [i for i in live if not finite[i]]
+        nxt[~finite] = 0                     # poisoned tokens never emitted
+        self.tokens = jnp.asarray(nxt[:, None])
+        for i in good:
             req = self.slots[i]
             req.out.append(int(nxt[i]))
+            self._progress += 1
             if len(req.out) >= req.n_new:
                 req.t_done = time.perf_counter()
+                req.status = adm.DONE
+                self._metrics.bump("completed")
                 self.done.append(req)
                 self.slots[i] = None
-        return len(live)
+        if bad:
+            ambiguous = len(bad) == len(live) and len(live) > 1
+            reqs = [self.slots[i] for i in bad]
+            for i in bad:
+                self.slots[i] = None
+            self._purge_slots(bad)
+            self._quarantine(reqs, ambiguous)
+        return len(good)
 
-    def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
+    def run_until_drained(self, max_steps: int = 100000,
+                          watchdog_s: Optional[float] = None
+                          ) -> DrainResult:
+        """Step until the queue and slots drain. Returns a ``DrainResult``
+        (list of completed requests + ``status``): ``"drained"`` on a
+        clean drain, ``"timeout"`` when ``max_steps`` is exhausted with
+        work still pending (the old silent-return failure mode), and
+        ``"stalled"`` when ``watchdog_s`` elapses with no forward
+        progress (no token emitted, nothing shed or failed) — a wedged
+        engine is reported, not spun on."""
+        status = "drained"
+        last_progress = time.perf_counter()
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
+            before = (self._progress
+                      + self._metrics.counters["shed_deadline"])
             self.step()
-        return self.done
+            now = time.perf_counter()
+            if (self._progress
+                    + self._metrics.counters["shed_deadline"]) > before:
+                last_progress = now
+            elif (watchdog_s is not None
+                    and now - last_progress > watchdog_s):
+                status = "stalled"
+                break
+        else:
+            status = "timeout"
+        undrained = ([r for r in self.slots if r is not None]
+                     + list(self.queue))
+        if status == "timeout" and not undrained:
+            status = "drained"     # last permitted step finished the work
+        return DrainResult(self.done, status, undrained,
+                           shed=list(self.admission.shed),
+                           rejected=list(self.admission.rejected),
+                           failed=list(self.failed))
+
+    # ---- observability ---------------------------------------------------
+    def metrics(self) -> Dict:
+        """The structured serve-metrics dict (queue depth, shed counts,
+        retries, rank-bucket residency, TTFT/queue-wait percentiles, jit
+        retrace counters) — the one surface shared by operators
+        (``serve.py --stats-json``), the degradation benchmark and the
+        chaos tests."""
+        return self._metrics.snapshot(len(self.queue), self.level,
+                                      engine_stats=self.stats)

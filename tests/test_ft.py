@@ -1,0 +1,142 @@
+"""Fault-tolerance primitives (dist/ft.py): heartbeat write/read
+atomicity, torn-write handling, both stall detectors (wall-clock scan and
+skew-immune progress scan), and the sharding helpers. The heartbeat fault
+modes are driven through the real injection plan (dist/faultinject.py) —
+the same path the chaos suite and ``serve.py --fault-plan`` use."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.dist import ft
+from repro.dist.faultinject import FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat writer
+# ---------------------------------------------------------------------------
+def test_heartbeat_roundtrip_and_seq(tmp_path):
+    hb = ft.Heartbeat(str(tmp_path / "w0"), worker_id=3)
+    hb.beat(10)
+    hb.beat(11)
+    p = hb.read()
+    assert p["worker_id"] == 3 and p["step"] == 11 and p["seq"] == 2
+    # atomic publish: no .tmp staging file survives a beat
+    assert not os.path.exists(str(tmp_path / "w0") + ".tmp")
+
+
+def test_heartbeat_read_missing_propagates(tmp_path):
+    hb = ft.Heartbeat(str(tmp_path / "never_beat"))
+    with pytest.raises(FileNotFoundError):
+        hb.read()
+
+
+def test_heartbeat_torn_payload_raises_typed(tmp_path):
+    path = str(tmp_path / "w0")
+    hb = ft.Heartbeat(path, fault=FaultPlan(hb_torn_at=1))
+    hb.beat(0)                       # injected torn in-place write
+    with open(path) as f:
+        raw = f.read()
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(raw)              # the payload really is torn
+    with pytest.raises(ft.HeartbeatError):
+        hb.read()
+    assert "hb_torn@1" in hb.fault.fired
+
+
+def test_heartbeat_skip_mode_suppresses_writes(tmp_path):
+    path = str(tmp_path / "w0")
+    hb = ft.Heartbeat(path, fault=FaultPlan(hb_skip_from=2))
+    hb.beat(0)                       # seq 1: written
+    first = hb.read()
+    hb.beat(1)                       # seq 2: suppressed (wedged worker)
+    hb.beat(2)                       # seq 3: suppressed
+    assert hb.read() == first        # file frozen at the last real beat
+    assert hb.seq == 3               # the worker *thinks* it kept beating
+
+
+# ---------------------------------------------------------------------------
+# detect_stalled (stateless wall-clock scan)
+# ---------------------------------------------------------------------------
+def test_detect_stalled_boundaries(tmp_path):
+    hb = ft.Heartbeat(str(tmp_path / "w0"))
+    hb.beat(0)
+    assert ft.detect_stalled(str(tmp_path), deadline_s=1e-9) == ["w0"]
+    assert ft.detect_stalled(str(tmp_path), deadline_s=3600) == []
+
+
+def test_detect_stalled_torn_payload_falls_back_to_mtime(tmp_path):
+    """A torn payload must NOT read as 'stalled since epoch': the file
+    mtime (published by the same rename/write) is the liveness bound."""
+    path = str(tmp_path / "w0")
+    hb = ft.Heartbeat(path, fault=FaultPlan(hb_torn_at=1))
+    hb.beat(0)                       # torn: unparseable JSON, fresh mtime
+    assert ft.detect_stalled(str(tmp_path), deadline_s=3600) == []
+    # and with an ancient mtime it IS stalled, even though unreadable
+    os.utime(path, (time.time() - 7200, time.time() - 7200))
+    assert ft.detect_stalled(str(tmp_path), deadline_s=3600) == ["w0"]
+
+
+def test_detect_stalled_ignores_tmp_staging(tmp_path):
+    (tmp_path / "w0.tmp").write_text("{in-flight rename staging}")
+    assert ft.detect_stalled(str(tmp_path), deadline_s=1e-9) == []
+
+
+# ---------------------------------------------------------------------------
+# StallDetector (stateful, reader-clock progress scan)
+# ---------------------------------------------------------------------------
+def test_stall_detector_progress_and_stall(tmp_path):
+    hb = ft.Heartbeat(str(tmp_path / "w0"))
+    det = ft.StallDetector(str(tmp_path), deadline_s=0.05)
+    hb.beat(0)
+    assert det.poll() == []          # first sight starts the grace window
+    hb.beat(1)
+    assert det.poll() == []          # seq advanced: healthy
+    time.sleep(0.08)
+    assert det.poll() == ["w0"]      # no progress for > deadline
+    hb.beat(2)
+    assert det.poll() == []          # progress clears the stall
+
+
+def test_stall_detector_immune_to_wall_clock_skew(tmp_path):
+    """A beat whose wall-clock 'time' is hours in the past (writer clock
+    stepped backwards) must still read as LIVE: the detector compares seq
+    counters on the reader's monotonic clock, never cross-host time."""
+    path = tmp_path / "w0"
+    det = ft.StallDetector(str(tmp_path), deadline_s=0.05)
+    for seq in (1, 2):
+        path.write_text(json.dumps(
+            {"worker_id": 0, "step": seq, "seq": seq,
+             "time": time.time() - 9999}))
+        assert det.poll() == []
+    # meanwhile the wall-clock scan would misclassify this worker:
+    assert ft.detect_stalled(str(tmp_path), deadline_s=3600) == ["w0"]
+
+
+def test_stall_detector_torn_payload_uses_mtime_marker(tmp_path):
+    path = tmp_path / "w0"
+    path.write_text("{torn")
+    det = ft.StallDetector(str(tmp_path), deadline_s=0.05)
+    assert det.poll() == []          # grace on first sight
+    time.sleep(0.08)
+    assert det.poll() == ["w0"]      # mtime marker never advanced
+    path.write_text("{torn again")   # fresh mtime = progress signal
+    assert det.poll() == []
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_rows,shards", [(64, 4), (65, 4), (7, 3), (8, 1)])
+def test_shard_rows_disjoint_cover(n_rows, shards):
+    parts = [ft.shard_rows(n_rows, shards, i) for i in range(shards)]
+    allrows = np.concatenate(parts)
+    assert len(allrows) == n_rows == len(set(allrows.tolist()))
+    assert (np.sort(allrows) == np.arange(n_rows)).all()
+
+
+def test_speculative_shard_rederives_neighbor():
+    assert (ft.speculative_shard(64, 4, 1, 2) == ft.shard_rows(64, 4, 3)).all()
+    assert (ft.speculative_shard(64, 4, 3, 1) == ft.shard_rows(64, 4, 0)).all()

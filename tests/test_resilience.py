@@ -1,0 +1,382 @@
+"""Chaos suite (ISSUE 6): deterministic fault injection against the
+continuous batcher's resilience layer.
+
+The load-bearing oracle is a FAULT-FREE run of the same workload: under
+every injected fault, each request that is not deliberately shed must
+complete with EXACTLY the tokens of the clean run (greedy decode is
+deterministic; quarantine replays a victim from its prompt, so a
+transient fault is invisible in the output stream). Shedding decisions
+must be seed-deterministic: two identical runs shed identical rid sets.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.dist import faultinject as FI
+from repro.models import transformer as T
+from repro.serve import admission as adm
+from repro.serve.engine import (ContinuousBatcher, DrainResult, Request,
+                                ServeConfig)
+
+CFG = get_config("llama-mini").replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256)
+SCFG = ServeConfig(batch=4, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    return p
+
+
+@pytest.fixture(scope="module")
+def comp(params):
+    calib = [{"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)}]
+    cfg = CFG.replace(rank_multiple=1)
+    c, _ = CC.build_plan_and_params(
+        params, cfg, CC.CompressionConfig(ratio=0.4), calib)
+    return c
+
+
+def make_requests(n=6, n_new=5, seed=0, deadline_s=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, n_new=n_new, deadline_s=deadline_s,
+                    tokens=rng.integers(0, CFG.vocab_size, size=(7,),
+                                        dtype=np.int32))
+            for i in range(n)]
+
+
+def drain(params, reqs, **kw):
+    watchdog = kw.pop("watchdog_s", None)
+    max_steps = kw.pop("max_steps", 100000)
+    cb = ContinuousBatcher(params, CFG, SCFG, **kw)
+    for r in reqs:
+        cb.submit(r)
+    res = cb.run_until_drained(max_steps=max_steps, watchdog_s=watchdog)
+    return cb, res
+
+
+@pytest.fixture(scope="module")
+def oracle(params):
+    """Token oracle: the fault-free run every chaos run must match."""
+    _, res = drain(params, make_requests())
+    assert res.status == "drained" and len(res) == 6
+    return {r.rid: list(r.out) for r in res}
+
+
+def assert_identical(res, oracle, rids=None):
+    got = {r.rid: list(r.out) for r in res}
+    want = {k: v for k, v in oracle.items()
+            if rids is None or k in rids}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# NaN-logit quarantine
+# ---------------------------------------------------------------------------
+def test_nan_decode_single_row_token_identity(params, oracle):
+    plan = FI.FaultPlan(nan_decode_step=2, nan_rows=(1,))
+    cb, res = drain(params, make_requests(), faults=plan)
+    m = cb.metrics()
+    assert res.status == "drained"
+    assert m["poison_events"] == 1 and m["poison_retries"] == 1
+    assert m["poison_failures"] == 0 and m["slot_purges"] == 1
+    assert any(f.startswith("nan_decode@2") for f in plan.fired)
+    assert_identical(res, oracle)    # victim replayed bit-identically
+
+
+def test_nan_decode_seeded_row_is_deterministic(params, oracle):
+    """With no row pinned, the poisoned slot is chosen by (seed, step) —
+    two runs fire on the same row and produce identical metrics."""
+    fired = []
+    for _ in range(2):
+        plan = FI.FaultPlan(seed=7, nan_decode_step=3)
+        cb, res = drain(params, make_requests(), faults=plan)
+        assert res.status == "drained"
+        assert_identical(res, oracle)
+        fired.append(plan.fired)
+    assert fired[0] == fired[1]
+
+
+def test_nan_decode_all_rows_bisects_and_recovers(params, oracle):
+    """Every live row non-finite at once: attribution is ambiguous, the
+    quarantine bisects (isolated replay probes), finds no persistent
+    offender, and replays everyone — still token-identical."""
+    plan = FI.FaultPlan(nan_decode_step=1, nan_rows="all")
+    cb, res = drain(params, make_requests(), faults=plan)
+    m = cb.metrics()
+    assert res.status == "drained"
+    assert m["poison_events"] == 1 and m.get("poison_probes", 0) >= 1
+    assert m["poison_failures"] == 0
+    assert_identical(res, oracle)
+
+
+def test_nan_prefill_admission_token_identity(params, oracle):
+    plan = FI.FaultPlan(nan_prefill_admission=0, nan_rows=(0,))
+    cb, res = drain(params, make_requests(), faults=plan)
+    assert res.status == "drained"
+    assert any(f.startswith("nan_prefill@0") for f in plan.fired)
+    assert_identical(res, oracle)
+
+
+def test_persistent_poison_fails_typed_others_unharmed(params, oracle):
+    """A request whose content reliably breaks the model must exhaust its
+    retry budget and fail with a typed status — never stall the engine,
+    never corrupt its batch-mates' outputs."""
+    plan = FI.FaultPlan(poison_rids=(2,))
+    cb, res = drain(params, make_requests(), faults=plan,
+                    admission=adm.AdmissionConfig(max_retries=1))
+    m = cb.metrics()
+    assert res.status == "drained"
+    assert [r.rid for r in res.failed] == [2]
+    assert res.failed[0].status == adm.FAILED_POISON
+    assert "non-finite logits" in res.failed[0].error
+    assert m["poison_failures"] == 1
+    assert m["poison_retries"] == 2          # budget 1 => 2 attempts
+    assert_identical(res, oracle, rids={0, 1, 3, 4, 5})
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, backpressure, flood
+# ---------------------------------------------------------------------------
+def test_deadline_shedding_is_deterministic(params, oracle):
+    """Overdue requests (deadline already passed) shed identically across
+    runs; survivors complete token-identically."""
+    outcomes = []
+    for _ in range(2):
+        reqs = make_requests()
+        for r in reqs:
+            if r.rid % 2:
+                r.deadline_s = -1.0          # overdue the moment it queues
+        cb, res = drain(params, reqs)
+        assert res.status == "drained"
+        assert_identical(res, oracle, rids={0, 2, 4})
+        shed = sorted(r.rid for r in res.shed)
+        assert all(r.status == adm.SHED_DEADLINE for r in res.shed)
+        outcomes.append((shed, sorted(r.rid for r in res)))
+    assert outcomes[0] == outcomes[1] == ([1, 3, 5], [0, 2, 4])
+
+
+def test_queue_flood_backpressure(params):
+    """A flood past --max-queue: exactly max_queue requests are accepted,
+    the rest are rejected AT SUBMIT with a typed status, and every
+    accepted request completes."""
+    flood = FI.flood_requests(20, CFG.vocab_size, seed=3)
+    cb = ContinuousBatcher(params, CFG, SCFG,
+                           admission=adm.AdmissionConfig(max_queue=5))
+    verdicts = [cb.submit(r) for r in flood]
+    assert sum(verdicts) == 5 and verdicts[:5] == [True] * 5
+    assert len(cb.admission.rejected) == 15
+    assert all(r.status == adm.SHED_QUEUE_FULL
+               for r in cb.admission.rejected)
+    res = cb.run_until_drained()
+    assert res.status == "drained" and len(res) == 5
+    m = cb.metrics()
+    assert m["shed_queue_full"] == 15 and m["completed"] == 5
+    assert m["peak_queue_depth"] == 5
+
+
+def test_flood_requests_seed_deterministic():
+    a = FI.flood_requests(4, 256, seed=9)
+    b = FI.flood_requests(4, 256, seed=9)
+    assert all((x.tokens == y.tokens).all() and x.rid == y.rid
+               for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Drain status: drained / timeout / stalled
+# ---------------------------------------------------------------------------
+def test_drain_result_is_list_compatible(params):
+    _, res = drain(params, make_requests(n=2))
+    assert isinstance(res, (list, DrainResult))
+    assert len(res) == 2 and res.status == "drained"
+    assert res.undrained == [] and res.failed == []
+
+
+def test_exhausted_max_steps_reports_timeout(params):
+    """The old engine returned silently when max_steps ran out with work
+    still queued — indistinguishable from a clean drain. Now it says so."""
+    _, res = drain(params, make_requests(), max_steps=2)
+    assert res.status == "timeout"
+    assert len(res.undrained) > 0
+
+
+def test_wedged_engine_trips_watchdog(params):
+    """An engine that stops making progress (wedge injector) must be
+    classified 'stalled' by the watchdog, not spun on forever."""
+    plan = FI.FaultPlan(wedge_from_step=1, wedge_s=0.005)
+    cb, res = drain(params, make_requests(), faults=plan,
+                    watchdog_s=0.05)
+    assert res.status == "stalled"
+    assert len(res.undrained) == 6
+    assert any(f.startswith("wedge@") for f in plan.fired)
+
+
+def test_slow_step_still_drains(params, oracle):
+    plan = FI.FaultPlan(slow_step=1, slow_s=0.02)
+    cb, res = drain(params, make_requests(), faults=plan,
+                    watchdog_s=5.0)
+    assert res.status == "drained"
+    assert_identical(res, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: corrupt artifacts quarantine, transient loads heal
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["bitflip", "truncate"])
+def test_corrupt_artifact_quarantined(tmp_path, comp, kind):
+    from repro.ckpt import store
+    cfg = CFG.replace(rank_multiple=1)
+    calib = [{"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)}]
+    d = str(tmp_path / kind)
+    # persist the already-compressed params with a fresh plan
+    _, plan = CC.build_plan_and_params(
+        T.init_model(cfg, jax.random.PRNGKey(0))[0], cfg,
+        CC.CompressionConfig(ratio=0.4), calib)
+    CC.save_plan(d, comp, plan, cfg)
+    FI.corrupt_artifact(f"{d}/{CC.ARTIFACT_NAME}", kind=kind, seed=1)
+    with pytest.raises(store.IntegrityError):
+        ContinuousBatcher.from_compressed(
+            d, cfg, SCFG, verify=True, retries=1, quarantine=True)
+    # the poisoned bytes were moved aside, not deleted
+    assert (tmp_path / kind / f"{CC.ARTIFACT_NAME}.quarantined").exists()
+    assert not (tmp_path / kind / CC.ARTIFACT_NAME).exists()
+
+
+def test_swapped_data_detected_only_by_hash_verify(tmp_path, comp):
+    """Corruption the zip CRC layer can NOT see: the stored arrays are
+    valid bytes that simply aren't the ones the manifest hashed (silent
+    replacement / wrong-file restore). A verify-less load succeeds
+    silently — which is exactly why --verify exists."""
+    cfg = CFG.replace(rank_multiple=1)
+    calib = [{"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)}]
+    _, plan = CC.build_plan_and_params(
+        T.init_model(cfg, jax.random.PRNGKey(0))[0], cfg,
+        CC.CompressionConfig(ratio=0.4), calib)
+    d = str(tmp_path / "art")
+    CC.save_plan(d, comp, plan, cfg)
+    mpath = f"{d}/{CC.ARTIFACT_NAME}/manifest.json"
+    with open(mpath) as f:
+        manifest = json.load(f)
+    key = sorted(manifest["hashes"])[0]
+    manifest["hashes"][key] = "0" * 64           # data != recorded hash
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    CC.load_plan(d, cfg=cfg, verify=False)       # loads, silently wrong
+    from repro.ckpt import store
+    with pytest.raises(store.IntegrityError):
+        CC.load_plan(d, cfg=cfg, verify=True)
+
+
+def test_transient_load_failure_retries_to_success(tmp_path, monkeypatch):
+    from repro.ckpt import store
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    store.save_pytree(str(tmp_path), tree, name="pytree")
+    real = store.load_pytree
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("transient I/O blip")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(store, "load_pytree", flaky)
+    got, _ = store.load_pytree_resilient(str(tmp_path), retries=2,
+                                         backoff_s=0.001)
+    assert calls["n"] == 2
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+
+
+def test_missing_artifact_is_not_retried(tmp_path):
+    """A missing directory is a config error, not corruption — it must
+    fail immediately (FileNotFoundError), not burn retries/quarantine."""
+    from repro.ckpt import store
+    with pytest.raises(FileNotFoundError):
+        store.load_pytree_resilient(str(tmp_path / "nope"), retries=3)
+
+
+# ---------------------------------------------------------------------------
+# Elastic-rank degradation ladder
+# ---------------------------------------------------------------------------
+def test_rank_bucket_values():
+    assert CC.rank_bucket(24, 0) == 24
+    assert CC.rank_bucket(24, 1) == 16          # pow2_ceil(24)=32 >> 1
+    assert CC.rank_bucket(24, 2) == 8
+    assert CC.rank_bucket(16, 1) == 8
+    assert CC.rank_bucket(1, 3) == 1            # clamped at min_rank
+    assert CC.rank_bucket(5, 1, min_rank=4) == 4
+
+
+def test_ladder_slices_share_bases_and_alias_full_rung(comp):
+    ladder = CC.slice_rank_ladder(comp, levels=2)
+    assert len(ladder) == 3
+    assert ladder[0] is comp                    # rung 0 IS the input tree
+    full = CC.compressed_param_count(ladder[0])
+    assert CC.compressed_param_count(ladder[1]) < full
+    assert CC.compressed_param_count(ladder[2]) < \
+        CC.compressed_param_count(ladder[1])
+
+
+def test_ladder_on_dense_params_collapses(params):
+    ladder = CC.slice_rank_ladder(params, levels=2)
+    assert all(rung is params for rung in ladder)
+
+
+def test_elastic_full_bucket_token_identical(comp):
+    """With the ladder enabled but pressure never tripping degradation,
+    the elastic engine is token-identical to the pre-ladder engine."""
+    reqs = make_requests(n=8)
+    cb0, res0 = drain(comp, [Request(rid=r.rid, tokens=r.tokens,
+                                     n_new=r.n_new) for r in reqs])
+    cbE, resE = drain(comp, reqs, admission=adm.AdmissionConfig(
+        elastic=True, degrade_above=10**6))
+    assert res0.status == resE.status == "drained"
+    assert {r.rid: list(r.out) for r in resE} == \
+        {r.rid: list(r.out) for r in res0}
+    assert cbE.metrics()["rank_residency"].keys() == {"0"}
+
+
+def test_elastic_degrades_under_pressure_deterministically(comp):
+    """Queue pressure drops the decode rank (residency shows degraded
+    rungs), everything still completes, and two identical runs agree on
+    residency AND tokens; each rung costs exactly one decode trace."""
+    runs = []
+    for _ in range(2):
+        cb, res = drain(comp, make_requests(n=16),
+                        admission=adm.AdmissionConfig(
+                            elastic=True, elastic_levels=2,
+                            degrade_above=4, restore_below=1))
+        assert res.status == "drained" and len(res) == 16
+        m = cb.metrics()
+        assert set(m["rank_residency"]) > {"0"}     # actually degraded
+        assert m["engine"]["decode_retraces"] == \
+            len(set(m["rank_residency"]))
+        runs.append((m["rank_residency"],
+                     {r.rid: list(r.out) for r in res}))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# Metrics surface
+# ---------------------------------------------------------------------------
+def test_metrics_snapshot_schema(params):
+    cb, res = drain(params, make_requests(n=3, n_new=2))
+    m = cb.metrics()
+    for key in ("submitted", "accepted", "completed", "shed_queue_full",
+                "shed_deadline", "poison_events", "poison_failures",
+                "slot_purges", "steps", "peak_queue_depth", "queue_depth",
+                "rank_level", "rank_residency", "ttft", "queue_wait",
+                "engine"):
+        assert key in m, key
+    assert m["submitted"] == m["accepted"] == m["completed"] == 3
+    assert m["ttft"]["n"] == 3 and m["ttft"]["p95_ms"] >= 0
+    assert json.dumps(m)                        # JSON-serializable as-is
