@@ -268,6 +268,29 @@ def load_pytree(ckpt_dir: str, name: str = "pytree",
     return build(manifest["structure"]), manifest["meta"]
 
 
+def artifact_fingerprint(ckpt_dir: str, name: str = "pytree") -> str:
+    """Stable identity of a saved pytree artifact: sha256 over the
+    manifest's per-array content hashes (falling back to the raw
+    manifest bytes for pre-hashing artifacts). Two artifacts with
+    byte-identical arrays fingerprint identically; any content change —
+    re-save, bit flip, different ranks — changes it. The serve AOT
+    compilation cache keys on this (``serve/aot.py``), so a compiled
+    executable can never be replayed against a different artifact."""
+    path = os.path.join(ckpt_dir, name)
+    with open(os.path.join(path, "manifest.json"), "rb") as f:
+        raw = f.read()
+    manifest = json.loads(raw)
+    h = hashlib.sha256()
+    hashes = manifest.get("hashes")
+    if hashes:
+        for k in sorted(hashes):
+            h.update(k.encode())
+            h.update(hashes[k].encode())
+    else:
+        h.update(raw)
+    return h.hexdigest()
+
+
 def quarantine_artifact(ckpt_dir: str, name: str = "pytree") -> str:
     """Move a failing artifact aside so nothing boots from it again and a
     re-push/re-save can land cleanly at the original path. Returns the

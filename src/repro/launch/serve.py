@@ -1,43 +1,40 @@
-"""Serving launcher: load a checkpoint (optionally D-Rank-compress it on
-the fly, or boot straight from a saved compressed artifact), start the
-continuous-batching engine, run a synthetic request workload, and report
-latency/throughput.
+"""Serving launcher: a thin argparse front over the typed public API in
+``repro.serve.api`` (ServeOptions / load_engine / serve — DESIGN.md
+§5.6). Every flag maps 1:1 onto a :class:`ServeOptions` field; all
+validation and behavior lives in the API module, so anything this CLI
+can do a Python caller can do with the dataclass.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
         --ckpt runs/mini_mha --compress drank --ratio 0.3 \
         --save-compressed runs/mini_drank30 --requests 16 --n-new 32
 
-    # later: serve the artifact directly (no calibration/SVD at boot);
-    # --verify re-checks the manifest content hashes first
+    # later: serve the artifact directly, AOT-compiled — a warm
+    # compilation cache boots to first token without retracing
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
-        --compressed-ckpt runs/mini_drank30 --verify --requests 16 \
-        --n-new 32
+        --compressed-ckpt runs/mini_drank30 --verify --aot \
+        --requests 16 --n-new 32
 
-    # resilient serving: bounded queue, deadlines, elastic-rank
-    # degradation, liveness heartbeats, structured metrics — and a
-    # deterministic fault plan for chaos drills (DESIGN.md §5)
+    # resilient serving at scale: two replicas behind the router,
+    # bounded queues, deadlines, elastic-rank degradation
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
-        --requests 32 --max-queue 16 --deadline-s 30 --elastic \
-        --watchdog-s 60 --heartbeat-dir runs/hb \
-        --fault-plan '{"nan_decode_step": 3}' --stats-json runs/serve.json
+        --requests 32 --replicas 2 --max-queue 16 --deadline-s 30 \
+        --elastic --stats-json runs/serve.json
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
-
-import jax
-import numpy as np
+import warnings
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """Flags mirror ``ServeOptions`` fields (``-`` ↔ ``_``); deprecated
+    spellings keep working via ``parse_serve_options``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--ckpt", default="")
-    ap.add_argument("--compress", default="",
-                    choices=["", *__import__("repro.core.compress",
-                                             fromlist=["METHODS"]).METHODS])
+    from repro.core.compress import METHODS
+    ap.add_argument("--compress", default="", choices=["", *METHODS])
     ap.add_argument("--ratio", type=float, default=0.3)
     ap.add_argument("--group-size", type=int, default=2)
     ap.add_argument("--beta", type=float, default=0.3)
@@ -78,7 +75,10 @@ def main(argv=None) -> int:
     ap.add_argument("--rsvd-threshold", type=int, default=0,
                     help="with --device-compress: min-side size above "
                          "which the exact eigh switches to randomized SVD")
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="decode slots (continuous-batching width)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help=argparse.SUPPRESS)   # deprecated alias of --batch
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -120,155 +120,61 @@ def main(argv=None) -> int:
                     help="write the structured serve-metrics dict "
                          "(queue/shed/retry counters, TTFT percentiles, "
                          "rank-bucket residency) to this path")
+    # --- front door -------------------------------------------------------
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-compile the serving surface at boot, backed "
+                         "by the persistent compilation cache keyed on "
+                         "the artifact fingerprint (serve/aot.py); a "
+                         "warm cache boots without any XLA compiles")
+    ap.add_argument("--aot-cache-dir", default="",
+                    help="compilation cache location (default "
+                         "$REPRO_AOT_CACHE or ~/.cache/repro/aot)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run N engine replicas behind one router that "
+                         "places requests on the least-loaded replica "
+                         "and spills on backpressure")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the workload through the async front "
+                         "door (token streaming) even with --replicas 1")
+    return ap
+
+
+def parse_serve_options(argv=None):
+    """argv → :class:`repro.serve.api.ServeOptions`. Deprecated flags
+    are translated here (with a ``DeprecationWarning``) so the options
+    object only ever sees canonical names."""
+    from repro.serve.api import ServeOptions
+
+    ap = build_parser()
     args = ap.parse_args(argv)
+    if args.slots is not None:
+        warnings.warn("--slots is deprecated; use --batch",
+                      DeprecationWarning, stacklevel=2)
+        if args.batch is None:
+            args.batch = args.slots
+    if args.batch is None:
+        args.batch = 4
+    fields = {f.name for f in ServeOptions.__dataclass_fields__.values()}
+    kw = {k: v for k, v in vars(args).items() if k in fields}
+    try:
+        return ServeOptions(**kw)
+    except ValueError as e:
+        ap.error(str(e))
 
-    from repro.ckpt import store
-    from repro.configs import get_config
-    from repro.core import compress as CC
-    from repro.data.synthetic import DataConfig, calibration_batches
-    from repro.models import transformer as T
-    from repro.serve import admission as adm
-    from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
-    from repro.train import step as TS
 
-    cfg = get_config(args.arch)
-    scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
-    acfg = adm.AdmissionConfig(max_queue=args.max_queue,
-                               default_deadline_s=args.deadline_s,
-                               max_retries=args.max_retries,
-                               elastic=args.elastic,
-                               elastic_levels=args.elastic_levels)
-    faults = None
-    if args.fault_plan:
-        from repro.dist.faultinject import FaultPlan
-        faults = FaultPlan.from_json(args.fault_plan)
-        print(f"fault plan armed: {faults.to_json()}")
-    heartbeat = None
-    if args.heartbeat_dir:
-        import os
+def main(argv=None) -> int:
+    from repro.serve.api import serve
 
-        from repro.dist.ft import Heartbeat
-        heartbeat = Heartbeat(os.path.join(args.heartbeat_dir,
-                                           "worker0.json"), fault=faults)
-    resil = dict(admission=acfg, faults=faults, heartbeat=heartbeat)
-    if args.compressed_ckpt:
-        cb = ContinuousBatcher.from_compressed(
-            args.compressed_ckpt, cfg, scfg, verify=args.verify,
-            retries=args.load_retries, quarantine=args.load_retries > 0,
-            **resil)
-        print(f"booted from compressed checkpoint {args.compressed_ckpt} "
-              f"({cb.plan.summary['achieved_ratio']:.1%} removed, "
-              f"method={cb.plan.config.method}"
-              + (", integrity verified" if args.verify else "") + ")")
-    else:
-        if args.ckpt:
-            state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
-            step, state = store.restore(args.ckpt, state)
-            params = state.params
-            print(f"loaded {args.ckpt} @ step {step}")
-        else:
-            params, _ = T.init_model(cfg, jax.random.PRNGKey(args.seed))
-            print("serving a randomly initialized model (no --ckpt)")
-
-        if args.compress:
-            if args.whiten_stream and args.eager_capture:
-                ap.error("--whiten-stream needs the streaming capture; "
-                         "drop --eager-capture (the eager fp64 oracle "
-                         "always materializes Grams)")
-            calib_batch = 8           # rows per calibration batch
-            mesh = None
-            if args.calib_mesh_shards > 1:
-                if args.eager_capture:
-                    ap.error("--calib-mesh-shards needs the streaming "
-                             "capture; drop --eager-capture")
-                # shard_map splits batch ROWS over the data axis: the
-                # calibration batch must divide, and a ragged final
-                # batch (calib_samples % calib_batch) would too — fail
-                # at parse time, not deep inside lowering
-                if calib_batch % args.calib_mesh_shards != 0:
-                    ap.error(f"--calib-mesh-shards "
-                             f"{args.calib_mesh_shards} must divide the "
-                             f"calibration batch of {calib_batch} rows")
-                if args.calib_samples % calib_batch != 0:
-                    ap.error(f"--calib-samples {args.calib_samples} "
-                             f"must be a multiple of {calib_batch} with "
-                             f"--calib-mesh-shards (a ragged final "
-                             f"batch cannot split over the mesh)")
-                n_dev = len(jax.devices())
-                if n_dev < args.calib_mesh_shards:
-                    ap.error(f"--calib-mesh-shards {args.calib_mesh_shards}"
-                             f" but only {n_dev} local devices (set "
-                             f"XLA_FLAGS=--xla_force_host_platform_"
-                             f"device_count={args.calib_mesh_shards} to "
-                             f"fake a host mesh)")
-                from repro.launch.mesh import make_host_mesh
-                mesh = make_host_mesh(data=args.calib_mesh_shards, model=1)
-            import jax.numpy as jnp
-            dcfg = DataConfig(vocab_size=cfg.vocab_size,
-                              seq_len=args.calib_seq,
-                              global_batch=calib_batch)
-            calib = [{"tokens": jnp.asarray(b["tokens"])}
-                     for b in calibration_batches(
-                         dcfg, args.calib_samples, calib_batch)]
-            ccfg = CC.CompressionConfig(method=args.compress,
-                                        ratio=args.ratio,
-                                        group_size=args.group_size,
-                                        beta=args.beta,
-                                        rsvd_threshold=args.rsvd_threshold)
-            params, plan = CC.build_plan_and_params(
-                params, cfg, ccfg, calib,
-                streaming=not args.eager_capture,
-                device=args.device_compress,
-                mesh=mesh,
-                whiten_tags=(True if args.whiten_stream else None),
-                shard_grams_above=args.shard_grams_above)
-            print(f"compressed with {args.compress}: "
-                  f"{plan.summary['achieved_ratio']:.1%} removed")
-            if args.save_compressed:
-                path = CC.save_plan(args.save_compressed, params, plan, cfg)
-                print(f"saved compressed artifact to {path}")
-        cb = ContinuousBatcher(params, cfg, scfg, **resil)
-    rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    accepted = 0
-    for i in range(args.requests):
-        accepted += cb.submit(Request(
-            rid=i,
-            tokens=rng.integers(0, cfg.vocab_size,
-                                size=(args.prompt_len,), dtype=np.int32),
-            n_new=args.n_new))
-    if accepted < args.requests:
-        print(f"backpressure: {args.requests - accepted}/{args.requests} "
-              f"requests rejected at submit (--max-queue {args.max_queue})")
-    done = cb.run_until_drained(watchdog_s=args.watchdog_s)
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in done)
-    lat = [r.t_done - r.t_submit for r in done]
-    report = {
-        "drain_status": done.status,   # drained | timeout | stalled
-        "requests": len(done),
-        "shed": len(done.shed),
-        "rejected": len(done.rejected),
-        "failed": len(done.failed),
-        "generated_tokens": toks,
-        "tokens_per_s": round(toks / dt, 1) if toks else 0.0,
-        "mean_latency_s": round(float(np.mean(lat)), 3) if lat else 0.0,
-        "p95_latency_s": (round(float(np.percentile(lat, 95)), 3)
-                          if lat else 0.0),
-        "engine_stats": cb.stats,     # jit retraces, admissions
-    }
-    print(json.dumps(report, indent=1))
-    if done.status != "drained":
-        undone = [r.rid for r in done.undrained]
-        print(f"WARNING: drain ended '{done.status}' with "
+    opts = parse_serve_options(argv)
+    res = serve(opts, echo=print)
+    print(json.dumps(res.report, indent=1))
+    if res.status != "drained":
+        undone = [r.rid for r in res.undrained]
+        print(f"WARNING: drain ended '{res.status}' with "
               f"{len(undone)} requests unfinished: {undone[:8]}")
-    for r in done.failed:
+    for r in res.failed:
         print(f"FAILED rid={r.rid}: {r.error}")
-    if args.stats_json:
-        with open(args.stats_json, "w") as f:
-            json.dump(cb.metrics(), f, indent=1)
-        print(f"serve metrics written to {args.stats_json}")
-    return 0 if done.status == "drained" else 1
+    return 0 if res.status == "drained" else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,443 @@
+"""AOT-compiled serve executables with a persistent on-disk cache
+(DESIGN.md §5.6).
+
+Boot used to pay jit tracing for every prefill bucket plus the decode
+step the first time each shape arrived — a pod restart under load was a
+latency cliff of several seconds before the first token. This module
+makes the serve executables an explicit, ahead-of-time-compiled
+*registry*:
+
+* **ExecutableRegistry** is the one dispatch surface the engine calls
+  (``decode`` / ``prefill`` / ``scatter`` / ``purge``). Two
+  implementations share it:
+
+  - ``TracedRegistry`` — the historical behavior: one ``jax.jit``
+    closure per role, compiled lazily on first use, with the batcher's
+    ``*_retraces`` counters bumped at trace time (the bucketing
+    invariant tests assert on them).
+  - ``AotRegistry`` — every entry point is lowered and compiled
+    explicitly (``jax.jit(...).lower(avals).compile()``) and the
+    compiled executable is **persisted** via
+    ``jax.experimental.serialize_executable``. ``warm()`` precompiles
+    the whole serving surface at boot — the decode step for every
+    elastic-rank rung, every pow2 prefill bucket, and the scatter/purge
+    cache helpers — so the steady-state loop never traces.
+
+* **AotCache** is the persistent store: one file per executable under a
+  cache directory, keyed by sha256 of (artifact fingerprint ×
+  ServeConfig × model fingerprint × jax/jaxlib version × backend ×
+  entry signature). A second boot of the same artifact deserializes
+  instead of compiling (``aot_compiles == 0``), reaching the first
+  token in a fraction of the tracing boot (``benchmarks/boot_ttft.py``
+  records the ratio). Any mismatch — different artifact fingerprint,
+  different jax version, a corrupt or truncated cache file — simply
+  misses and falls back to a fresh compile; the cache can never change
+  results, only skip work.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+# Roles an engine dispatches through the registry. One compiled
+# executable exists per (role, variant): decode has one variant per
+# elastic-rank rung, prefill one per (rung, bucket), the cache helpers
+# one per source batch width.
+ROLE_DECODE = "decode"
+ROLE_PREFILL = "prefill"
+ROLE_SCATTER = "scatter"
+ROLE_PURGE = "purge"
+
+AOT_STAT_KEYS = ("aot_compiles", "aot_cache_hits", "aot_deser_failures",
+                 "aot_fallbacks")
+
+
+def default_cache_dir() -> str:
+    """Resolution order: ``$REPRO_AOT_CACHE`` then ``~/.cache/repro/aot``."""
+    return os.environ.get(
+        "REPRO_AOT_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "aot"))
+
+
+# ---------------------------------------------------------------------------
+# Cache-row helpers (shared by both registries; the engine used to keep
+# private copies of these as inline jit closures)
+# ---------------------------------------------------------------------------
+def scatter_rows(pool: Dict, src: Dict, slots: jax.Array) -> Dict:
+    """One whole-pool update: row j of every `src` cache leaf lands in row
+    slots[j] of the pool (runs leaves carry a leading stacked-layer axis,
+    so batch is axis 1; `pos` is batch-leading). slots[j] >= pool batch
+    drops row j — admission pads with out-of-range slots."""
+    runs = jax.tree.map(
+        lambda pool_l, src_l: pool_l.at[:, slots].set(
+            src_l.astype(pool_l.dtype), mode="drop"),
+        pool["runs"], src["runs"])
+    pos = pool["pos"].at[slots].set(src["pos"], mode="drop")
+    return {"runs": runs, "pos": pos}
+
+
+def purge_rows(pool: Dict, rows: jax.Array) -> Dict:
+    """Zero cache rows + positions of quarantined slots so the next tenant
+    (or a masked-out dead region) can never attend into poisoned state;
+    rows >= batch are padding (dropped)."""
+    runs = jax.tree.map(
+        lambda leaf: leaf.at[:, rows].set(0, mode="drop"), pool["runs"])
+    pos = pool["pos"].at[rows].set(0, mode="drop")
+    return {"runs": runs, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints & cache keys
+# ---------------------------------------------------------------------------
+def live_fingerprint(params, cfg: ModelConfig) -> str:
+    """Fingerprint for an in-memory (non-artifact) boot: the param tree's
+    structure + leaf shapes/dtypes and the model dims. Weights are jit
+    *arguments*, so the executables depend only on shapes — but keying on
+    the artifact identity (see ``ckpt.store.artifact_fingerprint`` for
+    saved artifacts) keeps invalidation semantics trivially safe."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h = hashlib.sha256()
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        h.update(str(jnp.shape(leaf)).encode())
+        h.update(str(getattr(leaf, "dtype", type(leaf))).encode())
+    h.update(json.dumps({"name": cfg.name, "n_layers": cfg.n_layers,
+                         "d_model": cfg.d_model,
+                         "vocab_size": cfg.vocab_size},
+                        sort_keys=True).encode())
+    return "live-" + h.hexdigest()[:32]
+
+
+def _sig_of(args) -> str:
+    """Canonical signature of a call: treedef + flat avals. Part of the
+    disk key, so executables can never be replayed against a different
+    input structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    parts = [str(treedef)]
+    for leaf in leaves:
+        parts.append(f"{jnp.shape(leaf)}:{getattr(leaf, 'dtype', '?')}")
+    return ";".join(parts)
+
+
+def cache_key(fingerprint: str, role: str, variant: Tuple, sig: str,
+              scfg, cfg: ModelConfig) -> str:
+    """sha256 over everything that could change the compiled executable:
+    artifact fingerprint, serve + model config, jax/jaxlib version and
+    backend, and the entry's (role, variant, aval signature)."""
+    payload = {
+        "fingerprint": fingerprint,
+        "role": role,
+        "variant": list(variant),
+        "sig": sig,
+        "scfg": {"batch": scfg.batch, "max_len": scfg.max_len},
+        "model": {"name": cfg.name, "n_layers": cfg.n_layers,
+                  "d_model": cfg.d_model, "vocab_size": cfg.vocab_size,
+                  "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                  "dtype": str(cfg.dtype)},
+        "jax": jax.__version__,
+        "jaxlib": getattr(jax, "jaxlib_version", ""),
+        "backend": jax.default_backend(),
+    }
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+class AotCache:
+    """Directory of serialized compiled executables, one ``<key>.aotx``
+    file per entry (pickle of ``serialize_executable.serialize`` output:
+    the XLA executable bytes plus in/out pytree defs). Writes are atomic
+    (tmp + rename) so a crashed boot never leaves a torn entry; reads
+    treat *any* failure — missing file, bad pickle, an executable built
+    by an incompatible jax/backend — as a miss."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, key: str) -> str:
+        return os.path.join(self.dir, f"{key}.aotx")
+
+    def load(self, key: str):
+        """Deserialize the executable for ``key`` or return ``None`` on
+        any miss/corruption (the caller recompiles)."""
+        from jax.experimental.serialize_executable import (
+            deserialize_and_load)
+        p = self.path(key)
+        if not os.path.exists(p):
+            return None
+        try:
+            with open(p, "rb") as f:
+                payload, in_tree, out_tree = pickle.loads(f.read())
+            return deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            return False          # present but unusable: count separately
+
+    def has(self, key: str) -> bool:
+        return os.path.exists(self.path(key))
+
+    def store(self, key: str, compiled) -> None:
+        from jax.experimental.serialize_executable import serialize
+        try:
+            blob = pickle.dumps(serialize(compiled))
+        except Exception:
+            return                # unserializable backend: cache disabled
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self.path(key))
+
+    def keys(self) -> List[str]:
+        return sorted(f[:-5] for f in os.listdir(self.dir)
+                      if f.endswith(".aotx"))
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+class TracedRegistry:
+    """The pre-AOT behavior as a registry: one lazily-traced ``jax.jit``
+    per role. Trace-time side effects bump the engine's historical
+    retrace counters (``prefill_retraces`` / ``decode_retraces`` /
+    ``scatter_retraces``) exactly as before — the bucketing invariant
+    (≤ ⌈log2(max_len)⌉ prefill traces, 1 decode trace per rung) is
+    load-bearing for serving latency and asserted in tests."""
+
+    kind = "traced"
+
+    def __init__(self, cfg: ModelConfig, scfg, stats: Optional[Dict] = None):
+        from repro.models import transformer as T
+        self.cfg, self.scfg = cfg, scfg
+        self.stats = stats if stats is not None else {}
+        for k in ("prefill_retraces", "decode_retraces", "scatter_retraces"):
+            self.stats.setdefault(k, 0)
+
+        def _decode_fn(p, c, t):
+            self.stats["decode_retraces"] += 1
+            return T.decode_step(p, cfg, c, t)
+
+        def _prefill_fn(p, b):
+            self.stats["prefill_retraces"] += 1
+            return T.prefill(p, cfg, b, max_len=scfg.max_len)
+
+        def _scatter_fn(pool, src, slots):
+            self.stats["scatter_retraces"] += 1
+            return scatter_rows(pool, src, slots)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
+        self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
+        self._purge = jax.jit(purge_rows, donate_argnums=(0,))
+
+    def bind_stats(self, stats: Dict) -> None:
+        """Fold any counts accumulated so far into ``stats`` and make it
+        the live counter dict (the engine owns one stats surface)."""
+        for k, v in self.stats.items():
+            stats[k] = stats.get(k, 0) + v
+        self.stats = stats
+
+    # role dispatch — variant hints are accepted (and ignored) so the
+    # engine calls both registries identically
+    def decode(self, params, cache, tokens, *, level: int = 0):
+        return self._decode(params, cache, tokens)
+
+    def prefill(self, params, batch, *, level: int = 0, bucket=None):
+        return self._prefill(params, batch)
+
+    def scatter(self, pool, src, slots):
+        return self._scatter(pool, src, slots)
+
+    def purge(self, pool, rows):
+        return self._purge(pool, rows)
+
+    def warm(self, ladder: Sequence, bucketed: bool) -> None:
+        """No-op: the traced registry compiles lazily, on first use."""
+
+
+class AotRegistry:
+    """AOT-compiled serve executables behind the same role interface.
+
+    Every dispatch resolves (role, variant) → a compiled executable:
+    first from the in-memory table, then from the persistent
+    ``AotCache`` (deserialization, ~ms), and only then by an explicit
+    ``jax.jit(...).lower(avals).compile()`` whose result is written back
+    to the cache. ``warm()`` resolves the entire serving surface up
+    front from abstract avals — nothing runs, nothing traces lazily
+    afterwards, and a warm cache makes boot O(deserialize) instead of
+    O(compile).
+
+    Fallback ladder (nothing here can change results, only cost): a
+    cache file that is missing/corrupt/incompatible → compile; a loaded
+    executable that rejects the actual runtime avals (``TypeError``) →
+    recompile from the live arguments and replace the entry
+    (``aot_fallbacks``)."""
+
+    kind = "aot"
+
+    def __init__(self, cfg: ModelConfig, scfg, fingerprint: str,
+                 cache_dir: Optional[str] = None,
+                 stats: Optional[Dict] = None):
+        from repro.models import transformer as T
+        self._T = T
+        self.cfg, self.scfg = cfg, scfg
+        self.fingerprint = fingerprint
+        self.cache = AotCache(cache_dir or default_cache_dir())
+        self.stats = stats if stats is not None else {}
+        for k in AOT_STAT_KEYS:
+            self.stats.setdefault(k, 0)
+        # the engine's traced-era counters stay present (and zero) so the
+        # metrics schema is identical across registries
+        for k in ("prefill_retraces", "decode_retraces", "scatter_retraces"):
+            self.stats.setdefault(k, 0)
+        self._mem: Dict[Tuple, Any] = {}
+
+    def bind_stats(self, stats: Dict) -> None:
+        for k, v in self.stats.items():
+            stats[k] = stats.get(k, 0) + v
+        self.stats = stats
+
+    # ---- role functions --------------------------------------------------
+    def _role_fn(self, role: str):
+        cfg, scfg = self.cfg, self.scfg
+        if role == ROLE_DECODE:
+            return lambda p, c, t: self._T.decode_step(p, cfg, c, t), ()
+        if role == ROLE_PREFILL:
+            return (lambda p, b: self._T.prefill(p, cfg, b,
+                                                 max_len=scfg.max_len), ())
+        if role == ROLE_SCATTER:
+            return scatter_rows, (0,)
+        if role == ROLE_PURGE:
+            return purge_rows, (0,)
+        raise KeyError(role)
+
+    # ---- resolution ------------------------------------------------------
+    def _resolve(self, role: str, variant: Tuple, args: Tuple):
+        """(role, variant) → compiled executable, via memo → disk →
+        compile. ``args`` may mix concrete arrays and ShapeDtypeStructs —
+        only shapes/dtypes matter for lowering."""
+        memk = (role, variant)
+        exe = self._mem.get(memk)
+        if exe is not None:
+            return exe
+        fn, donate = self._role_fn(role)
+        key = cache_key(self.fingerprint, role, variant, _sig_of(args),
+                        self.scfg, self.cfg)
+        exe = self.cache.load(key)
+        if exe is False:
+            self.stats["aot_deser_failures"] += 1
+            exe = None
+        if exe is None:
+            compiled = jax.jit(fn, donate_argnums=donate
+                               ).lower(*args).compile()
+            self.stats["aot_compiles"] += 1
+            self.cache.store(key, compiled)
+            exe = compiled
+        else:
+            self.stats["aot_cache_hits"] += 1
+        self._mem[memk] = exe
+        return exe
+
+    def _call(self, role: str, variant: Tuple, *args):
+        exe = self._resolve(role, variant, args)
+        try:
+            return exe(*args)
+        except TypeError:
+            # aval drift (e.g. a weak-typed scalar from a caller we don't
+            # control): recompile against the live arguments and swap the
+            # entry — degraded to a compile, never to a wrong answer
+            self.stats["aot_fallbacks"] += 1
+            fn, donate = self._role_fn(role)
+            compiled = jax.jit(fn, donate_argnums=donate
+                               ).lower(*args).compile()
+            self.stats["aot_compiles"] += 1
+            self._mem[(role, variant)] = compiled
+            return compiled(*args)
+
+    # ---- role dispatch ---------------------------------------------------
+    def decode(self, params, cache, tokens, *, level: int = 0):
+        return self._call(ROLE_DECODE, (level,), params, cache, tokens)
+
+    def prefill(self, params, batch, *, level: int = 0, bucket=None):
+        if bucket is None:         # exact-length path (recurrent archs)
+            bucket = ("exact", int(batch["tokens"].shape[0]),
+                      int(batch["tokens"].shape[1]))
+        return self._call(ROLE_PREFILL, (level, bucket), params, batch)
+
+    def scatter(self, pool, src, slots):
+        return self._call(ROLE_SCATTER, (int(src["pos"].shape[0]),),
+                          pool, src, slots)
+
+    def purge(self, pool, rows):
+        return self._call(ROLE_PURGE, (), pool, rows)
+
+    # ---- boot-time precompilation ---------------------------------------
+    def _cache_aval(self):
+        cfg, scfg = self.cfg, self.scfg
+        return jax.eval_shape(
+            lambda: self._T.init_cache(cfg, scfg.batch, scfg.max_len))
+
+    def prefill_buckets(self) -> List[int]:
+        """The pow2 prompt buckets the engine can ever ask for:
+        2, 4, … capped at ``max_len`` (which is itself a bucket when not
+        a power of two)."""
+        out, b = [], 2
+        while b < self.scfg.max_len:
+            out.append(b)
+            b *= 2
+        out.append(self.scfg.max_len)
+        return sorted(set(out))
+
+    def _ensure(self, role: str, variant: Tuple, args: Tuple) -> None:
+        """Warm-path resolve: guarantee this entry will never need a
+        compile at dispatch time, as cheaply as possible. A disk-cached
+        entry is left ON DISK — deserialization (~0.1s/entry on the
+        bigger models) is deferred to first dispatch, so a warm boot's
+        time-to-first-token pays only for the executables the first
+        request actually touches. Anything missing compiles (and
+        persists) now, which is the whole cold-boot cost."""
+        if (role, variant) in self._mem:
+            return
+        key = cache_key(self.fingerprint, role, variant, _sig_of(args),
+                        self.scfg, self.cfg)
+        if self.cache.has(key):
+            return                 # servable; lazy-deserialized on use
+        self._resolve(role, variant, args)
+
+    def warm(self, ladder: Sequence, bucketed: bool) -> None:
+        """Precompile (or cache-verify) the full serving surface: the
+        decode step for every elastic-rank rung, every pow2 prefill
+        bucket at full rank, and the scatter/purge cache helpers.
+        Lowering happens against abstract avals — no model math runs.
+        After this returns, steady-state serving performs zero XLA
+        compiles (``aot_compiles`` stays flat) no matter which bucket,
+        rung or helper a request exercises."""
+        B = self.scfg.batch
+        i32 = jnp.int32
+        cache_aval = self._cache_aval()
+        tok_aval = jax.ShapeDtypeStruct((B, 1), i32)
+        for level, params in enumerate(ladder):
+            self._ensure(ROLE_DECODE, (level,),
+                         (params, cache_aval, tok_aval))
+        if bucketed:
+            src_aval = None
+            for sb in self.prefill_buckets():
+                batch_aval = {"tokens": jax.ShapeDtypeStruct((B, sb), i32),
+                              "lengths": jax.ShapeDtypeStruct((B,), i32)}
+                self._ensure(ROLE_PREFILL, (0, sb), (ladder[0], batch_aval))
+                if src_aval is None:
+                    fn, _ = self._role_fn(ROLE_PREFILL)
+                    _, src_aval = jax.eval_shape(fn, ladder[0], batch_aval)
+            slots_aval = jax.ShapeDtypeStruct((B,), i32)
+            if src_aval is not None:
+                self._ensure(ROLE_SCATTER, (B,),
+                             (cache_aval, src_aval, slots_aval))
+        self._ensure(ROLE_PURGE, (),
+                     (cache_aval, jax.ShapeDtypeStruct((B,), i32)))

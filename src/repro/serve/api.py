@@ -1,0 +1,375 @@
+"""Typed public serving API (DESIGN.md §5.6).
+
+This module is the stable, importable surface over the serving stack:
+:class:`ServeOptions` (a frozen dataclass holding every knob the CLI
+exposes), :func:`load_engine` (options → a ready engine), and
+:func:`serve` (options → a drained workload with a structured report).
+``repro.launch.serve`` is a thin argparse shim over these — anything a
+flag can do, the dataclass can do from Python, and validation lives
+here (once) instead of in parser callbacks.
+
+    from repro.serve.api import ServeOptions, serve
+    res = serve(ServeOptions(arch="llama-mini",
+                             compressed_ckpt="runs/mini_drank30",
+                             aot=True, requests=16, n_new=32))
+    assert res.status == "drained"
+    print(res.report["tokens_per_s"])
+
+The AOT boot path (``aot=True``) swaps the engine's lazily traced
+executables for an :class:`~repro.serve.aot.AotRegistry` keyed on the
+artifact fingerprint: a warm persistent cache makes boot-to-first-token
+O(deserialize) instead of O(compile) — see ``serve/aot.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve import admission as adm
+from repro.serve import aot as aotlib
+from repro.serve.aot import AotCache, AotRegistry, TracedRegistry
+from repro.serve.engine import (ContinuousBatcher, DrainResult, Engine,
+                                Request, ServeConfig, from_compressed)
+from repro.serve.frontdoor import FrontDoor, Router, TokenStream
+
+__all__ = [
+    "ServeOptions", "load_engine", "serve",
+    "from_compressed", "Engine", "ContinuousBatcher",
+    "Request", "DrainResult", "ServeConfig",
+    "FrontDoor", "Router", "TokenStream",
+    "AotRegistry", "TracedRegistry", "AotCache",
+]
+
+_CALIB_BATCH = 8          # rows per calibration batch (matches launch CLI)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Everything the serving stack can be asked to do, as one frozen
+    value. Field names are the CLI flags with ``-`` → ``_`` (the one
+    rename: ``--slots`` is the deprecated alias of ``batch``).
+    Cross-field validation runs at construction — a bad combination
+    fails here, not minutes later inside a jit trace.
+
+    >>> opts = ServeOptions(arch="llama-mini", n_new=8)
+    >>> (opts.batch, opts.aot, opts.replicas)
+    (4, False, 1)
+    >>> ServeOptions(arch="llama-mini", compress="nope")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown compression method 'nope'
+    >>> ServeOptions(arch="llama-mini", whiten_stream=True,
+    ...              eager_capture=True)
+    Traceback (most recent call last):
+        ...
+    ValueError: whiten_stream needs the streaming capture; drop eager_capture
+    """
+
+    arch: str
+    # --- model / artifact sources ----------------------------------------
+    ckpt: str = ""
+    compress: str = ""              # one of core.compress.METHODS, or ""
+    ratio: float = 0.3
+    group_size: int = 2
+    beta: float = 0.3
+    compressed_ckpt: str = ""       # boot from a save_plan artifact
+    save_compressed: str = ""       # after compress, persist here
+    verify: bool = False            # re-hash artifact against manifest
+    load_retries: int = 0           # transient-load retry budget
+    # --- calibration (only with compress=) -------------------------------
+    eager_capture: bool = False
+    whiten_stream: bool = False
+    calib_mesh_shards: int = 0
+    shard_grams_above: int = 4096
+    calib_samples: int = 16
+    calib_seq: int = 128
+    device_compress: bool = False
+    rsvd_threshold: int = 0
+    # --- engine shape -----------------------------------------------------
+    batch: int = 4                  # decode slots (CLI: --batch / --slots)
+    max_len: int = 256
+    # --- synthetic workload (serve()) -------------------------------------
+    requests: int = 8
+    prompt_len: int = 16
+    n_new: int = 32
+    seed: int = 0
+    # --- resilience (DESIGN.md §5) ----------------------------------------
+    max_queue: int = 0
+    deadline_s: Optional[float] = None
+    max_retries: int = 2
+    elastic: bool = False
+    elastic_levels: int = 2
+    watchdog_s: Optional[float] = None
+    heartbeat_dir: str = ""
+    fault_plan: str = ""
+    stats_json: str = ""
+    # --- front door (this PR) ---------------------------------------------
+    aot: bool = False               # AOT-compiled executables + disk cache
+    aot_cache_dir: str = ""         # "" = $REPRO_AOT_CACHE or ~/.cache
+    replicas: int = 1               # N engines behind one Router
+    stream: bool = False            # drive through FrontDoor even for N=1
+
+    def __post_init__(self):
+        from repro.core.compress import METHODS
+        if self.compress and self.compress not in METHODS:
+            raise ValueError(
+                f"unknown compression method '{self.compress}'")
+        if self.compress and self.compressed_ckpt:
+            raise ValueError(
+                "compress= and compressed_ckpt= conflict: an artifact "
+                "is already compressed")
+        if self.save_compressed and not self.compress:
+            raise ValueError("save_compressed= needs compress=")
+        if self.whiten_stream and self.eager_capture:
+            raise ValueError("whiten_stream needs the streaming capture; "
+                             "drop eager_capture")
+        if self.calib_mesh_shards > 1:
+            if self.eager_capture:
+                raise ValueError("calib_mesh_shards needs the streaming "
+                                 "capture; drop eager_capture")
+            if _CALIB_BATCH % self.calib_mesh_shards != 0:
+                raise ValueError(
+                    f"calib_mesh_shards {self.calib_mesh_shards} must "
+                    f"divide the calibration batch of {_CALIB_BATCH} rows")
+            if self.calib_samples % _CALIB_BATCH != 0:
+                raise ValueError(
+                    f"calib_samples {self.calib_samples} must be a "
+                    f"multiple of {_CALIB_BATCH} with calib_mesh_shards "
+                    f"(a ragged final batch cannot split over the mesh)")
+        if self.batch < 1 or self.max_len < 1:
+            raise ValueError("batch and max_len must be >= 1")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+
+    def serve_config(self) -> ServeConfig:
+        return ServeConfig(batch=self.batch, max_len=self.max_len)
+
+    def admission_config(self) -> "adm.AdmissionConfig":
+        return adm.AdmissionConfig(max_queue=self.max_queue,
+                                   default_deadline_s=self.deadline_s,
+                                   max_retries=self.max_retries,
+                                   elastic=self.elastic,
+                                   elastic_levels=self.elastic_levels)
+
+
+def _echo(echo: Optional[Callable[[str], None]], msg: str) -> None:
+    if echo is not None:
+        echo(msg)
+
+
+def _resilience_kwargs(opts: ServeOptions, replica: int = 0,
+                       echo=None) -> Dict:
+    faults = None
+    if opts.fault_plan:
+        from repro.dist.faultinject import FaultPlan
+        faults = FaultPlan.from_json(opts.fault_plan)
+        _echo(echo, f"fault plan armed: {faults.to_json()}")
+    heartbeat = None
+    if opts.heartbeat_dir:
+        from repro.dist.ft import Heartbeat
+        heartbeat = Heartbeat(os.path.join(opts.heartbeat_dir,
+                                           f"worker{replica}.json"),
+                              fault=faults)
+    return dict(admission=opts.admission_config(), faults=faults,
+                heartbeat=heartbeat)
+
+
+def _compress_in_process(opts: ServeOptions, params, cfg, echo=None):
+    """The compress-at-boot path: calibrate on synthetic data, build the
+    plan, optionally persist the artifact. Returns (params, plan)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import compress as CC
+    from repro.data.synthetic import DataConfig, calibration_batches
+
+    mesh = None
+    if opts.calib_mesh_shards > 1:
+        n_dev = len(jax.devices())
+        if n_dev < opts.calib_mesh_shards:
+            raise ValueError(
+                f"calib_mesh_shards={opts.calib_mesh_shards} but only "
+                f"{n_dev} local devices (set XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count={opts.calib_mesh_shards} to fake "
+                f"a host mesh)")
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(data=opts.calib_mesh_shards, model=1)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=opts.calib_seq,
+                      global_batch=_CALIB_BATCH)
+    calib = [{"tokens": jnp.asarray(b["tokens"])}
+             for b in calibration_batches(dcfg, opts.calib_samples,
+                                          _CALIB_BATCH)]
+    ccfg = CC.CompressionConfig(method=opts.compress, ratio=opts.ratio,
+                                group_size=opts.group_size, beta=opts.beta,
+                                rsvd_threshold=opts.rsvd_threshold)
+    params, plan = CC.build_plan_and_params(
+        params, cfg, ccfg, calib,
+        streaming=not opts.eager_capture,
+        device=opts.device_compress,
+        mesh=mesh,
+        whiten_tags=(True if opts.whiten_stream else None),
+        shard_grams_above=opts.shard_grams_above)
+    _echo(echo, f"compressed with {opts.compress}: "
+                f"{plan.summary['achieved_ratio']:.1%} removed")
+    if opts.save_compressed:
+        path = CC.save_plan(opts.save_compressed, params, plan, cfg)
+        _echo(echo, f"saved compressed artifact to {path}")
+    return params, plan
+
+
+def _registry_for(opts: ServeOptions, cfg, scfg, fingerprint: str):
+    if not opts.aot:
+        return None                       # engine defaults to traced
+    return AotRegistry(cfg, scfg, fingerprint,
+                       cache_dir=opts.aot_cache_dir or None)
+
+
+def load_engine(opts: ServeOptions, *, replica: int = 0,
+                echo: Optional[Callable[[str], None]] = None
+                ) -> ContinuousBatcher:
+    """Options → a ready :class:`ContinuousBatcher`.
+
+    Resolves the model source (compressed artifact > checkpoint > random
+    init), runs compress-at-boot if asked, wires the resilience layer,
+    and — with ``aot=True`` — attaches an :class:`AotRegistry` keyed on
+    the artifact fingerprint and warms the whole serving surface, so the
+    returned engine never traces during steady state. ``echo`` receives
+    human-readable boot progress lines (the CLI passes ``print``)."""
+    from repro.configs import get_config
+
+    cfg = get_config(opts.arch)
+    scfg = opts.serve_config()
+    resil = _resilience_kwargs(opts, replica=replica, echo=echo)
+
+    if opts.compressed_ckpt:
+        from repro.ckpt.store import artifact_fingerprint
+        from repro.core.compress import ARTIFACT_NAME
+        fp = artifact_fingerprint(opts.compressed_ckpt, name=ARTIFACT_NAME)
+        reg = _registry_for(opts, cfg, scfg, fp)
+        cb = from_compressed(opts.compressed_ckpt, cfg, scfg,
+                             verify=opts.verify,
+                             load_retries=opts.load_retries,
+                             executables=reg, **resil)
+        _echo(echo, f"booted from compressed checkpoint "
+                    f"{opts.compressed_ckpt} "
+                    f"({cb.plan.summary['achieved_ratio']:.1%} removed, "
+                    f"method={cb.plan.config.method}"
+                    + (", integrity verified" if opts.verify else "") + ")")
+    else:
+        import jax
+
+        from repro.models import transformer as T
+        if opts.ckpt:
+            from repro.ckpt import store
+            from repro.train import step as TS
+            state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0))
+            step, state = store.restore(opts.ckpt, state)
+            params = state.params
+            _echo(echo, f"loaded {opts.ckpt} @ step {step}")
+        else:
+            params, _ = T.init_model(cfg, jax.random.PRNGKey(opts.seed))
+            _echo(echo, "serving a randomly initialized model (no ckpt)")
+        plan = None
+        if opts.compress:
+            params, plan = _compress_in_process(opts, params, cfg,
+                                                echo=echo)
+        reg = _registry_for(opts, cfg, scfg,
+                            aotlib.live_fingerprint(params, cfg))
+        cb = ContinuousBatcher(params, cfg, scfg, executables=reg, **resil)
+        cb.plan = plan
+    if opts.aot:
+        t0 = time.perf_counter()
+        cb.warm_executables()
+        s = cb.stats
+        _echo(echo, f"AOT warm in {time.perf_counter() - t0:.2f}s: "
+                    f"{s['aot_cache_hits']} cache hits, "
+                    f"{s['aot_compiles']} compiles "
+                    f"(cache: {cb.exec.cache.dir})")
+    return cb
+
+
+def _workload(opts: ServeOptions, vocab_size: int) -> List[Request]:
+    rng = np.random.default_rng(opts.seed)
+    return [Request(rid=i, n_new=opts.n_new,
+                    tokens=rng.integers(0, vocab_size,
+                                        size=(opts.prompt_len,),
+                                        dtype=np.int32))
+            for i in range(opts.requests)]
+
+
+def _report(result: DrainResult, stats, accepted: int, requests: int,
+            dt: float) -> Dict:
+    toks = sum(len(r.out) for r in result)
+    lat = [r.t_done - r.t_submit for r in result]
+    return {
+        "drain_status": result.status,   # drained | timeout | stalled
+        "requests": len(result),
+        "accepted": accepted,
+        "submitted": requests,
+        "shed": len(result.shed),
+        "rejected": len(result.rejected),
+        "failed": len(result.failed),
+        "generated_tokens": toks,
+        "tokens_per_s": round(toks / dt, 1) if toks else 0.0,
+        "mean_latency_s": round(float(np.mean(lat)), 3) if lat else 0.0,
+        "p95_latency_s": (round(float(np.percentile(lat, 95)), 3)
+                          if lat else 0.0),
+        "engine_stats": stats,           # retrace/AOT counters, admissions
+    }
+
+
+def serve(opts: ServeOptions, *,
+          echo: Optional[Callable[[str], None]] = None) -> DrainResult:
+    """Run the synthetic workload described by ``opts`` to drain and
+    return the :class:`DrainResult`, with the structured report attached
+    as ``result.report``.
+
+    ``replicas == 1`` and ``stream=False`` drives the engine directly
+    (``run_until_drained``, byte-identical to the historical CLI path);
+    ``replicas > 1`` or ``stream=True`` goes through the front door — N
+    engines behind a :class:`Router` that places each request on the
+    least-loaded replica and spills on backpressure."""
+    from repro.configs import get_config
+
+    cfg = get_config(opts.arch)
+    t0 = time.perf_counter()
+    engines = [load_engine(opts, replica=i,
+                           echo=echo if i == 0 else None)
+               for i in range(opts.replicas)]
+    reqs = _workload(opts, cfg.vocab_size)
+
+    if opts.replicas > 1 or opts.stream:
+        router = Router([FrontDoor(e) for e in engines]).start()
+        accepted = 0
+        for r in reqs:
+            st = router.submit(r.tokens, r.n_new,
+                               deadline_s=opts.deadline_s, rid=r.rid)
+            accepted += st is not None
+        result = router.drain_all(timeout=opts.watchdog_s)
+        router.close()
+        stats = [e.stats for e in engines]
+        metrics = [d.metrics() for d in router.doors]
+    else:
+        cb = engines[0]
+        accepted = 0
+        for r in reqs:
+            accepted += cb.submit(r)
+        result = cb.run_until_drained(watchdog_s=opts.watchdog_s)
+        stats = cb.stats
+        metrics = cb.metrics()
+    if accepted < opts.requests:
+        _echo(echo, f"backpressure: {opts.requests - accepted}/"
+                    f"{opts.requests} requests rejected at submit "
+                    f"(max_queue={opts.max_queue})")
+    dt = time.perf_counter() - t0
+    result.report = _report(result, stats, accepted, opts.requests, dt)
+    if opts.stats_json:
+        with open(opts.stats_json, "w") as f:
+            json.dump(metrics, f, indent=1)
+        _echo(echo, f"serve metrics written to {opts.stats_json}")
+    return result

@@ -1,5 +1,8 @@
-"""Serving: jitted prefill + single-token decode steps and a slot-based
+"""Serving: prefill + single-token decode steps and a slot-based
 continuous-batching driver, with a resilience layer (DESIGN.md §5).
+All jit dispatch goes through an executable registry (``serve/aot.py``):
+lazily traced by default, AOT-compiled from the persistent cache when
+booted through ``repro.serve.api`` with ``aot=True`` (DESIGN.md §5.6).
 
 The engine keeps a fixed pool of `batch` decode slots. Requests are admitted
 into free slots (their prompt prefilled into that slot's cache region) and
@@ -38,8 +41,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +53,7 @@ from repro.config import ModelConfig
 from repro.models import transformer as T
 from repro.models.params import Params
 from repro.serve import admission as adm
+from repro.serve import aot as aotlib
 
 
 @dataclass(frozen=True)
@@ -99,6 +104,52 @@ class DrainResult(list):
         self.failed = failed
 
 
+def _normalize_load_retries(retries, load_retries: int) -> int:
+    """Fold the pre-API ``retries=`` spelling into ``load_retries=`` (the
+    ``repro.serve.api`` name) with a deprecation warning."""
+    if retries is not None:
+        warnings.warn(
+            "from_compressed(retries=...) is deprecated; use "
+            "load_retries=... (repro.serve.api spelling)",
+            DeprecationWarning, stacklevel=3)
+        return int(retries)
+    return load_retries
+
+
+def from_compressed(ckpt_dir: str, cfg: ModelConfig,
+                    scfg: Optional[ServeConfig] = None, *,
+                    batcher: bool = True, verify: bool = False,
+                    load_retries: int = 0,
+                    quarantine: Optional[bool] = None,
+                    **kwargs):
+    """THE loading path for booting serve engines from a
+    ``compress.save_plan`` artifact — ``Engine.from_compressed`` and
+    ``ContinuousBatcher.from_compressed`` both delegate here (they used
+    to carry diverged copies of the manifest handling), and
+    ``repro.serve.api`` re-exports it.
+
+    ``verify=True`` re-hashes the stored arrays against the manifest
+    content hashes before booting; ``load_retries > 0`` retries a
+    transiently failing load with backoff and (with ``quarantine``,
+    default: on whenever retries are) moves a persistently failing
+    artifact aside before raising a typed ``store.IntegrityError``.
+    ``batcher=False`` returns the fixed-batch :class:`Engine` instead of
+    the :class:`ContinuousBatcher`; extra kwargs (``admission``,
+    ``faults``, ``heartbeat``, ``executables``) pass through to the
+    batcher constructor.
+    """
+    from repro.core import compress as CC
+    if quarantine is None:
+        quarantine = load_retries > 0
+    params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify,
+                                retries=load_retries, quarantine=quarantine)
+    scfg = scfg if scfg is not None else ServeConfig()
+    cls = ContinuousBatcher if batcher else Engine
+    eng = cls(params, cfg, scfg, **kwargs)
+    eng.plan = plan
+    return eng
+
+
 class Engine:
     def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig):
         self.params = params
@@ -113,16 +164,21 @@ class Engine:
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
                         scfg: ServeConfig, verify: bool = False,
-                        retries: int = 0,
-                        quarantine: bool = False) -> "Engine":
+                        retries: Optional[int] = None,
+                        load_retries: int = 0,
+                        quarantine: Optional[bool] = None) -> "Engine":
         """Boot directly from a ``compress.save_plan`` artifact — no
         calibration or SVD at serve time; the factorized list-form params
-        drop straight into the model code. ``verify=True`` re-hashes the
-        stored arrays against the manifest content hashes first
-        (``launch/serve.py --verify``). ``retries``/``quarantine``
-        retry-with-backoff a transiently failing load and move a
-        persistently sha256-failing artifact aside before raising a typed
-        ``store.IntegrityError`` (``--load-retries``).
+        drop straight into the model code. Delegates to the unified
+        module-level :func:`from_compressed` (one loading path for both
+        engine flavors, re-exported from ``repro.serve.api``).
+        ``verify=True`` re-hashes the stored arrays against the manifest
+        content hashes first (``launch/serve.py --verify``).
+        ``load_retries``/``quarantine`` retry-with-backoff a transiently
+        failing load and move a persistently sha256-failing artifact
+        aside before raising a typed ``store.IntegrityError``
+        (``--load-retries``); ``retries=`` is the deprecated pre-API
+        spelling of ``load_retries=``.
 
         Example (boot from an artifact and generate; continues the
         ``compress.save_plan`` example)::
@@ -148,12 +204,10 @@ class Engine:
             >>> eng.generate(prompts, n_new=3).shape
             (2, 3)
         """
-        from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify,
-                                    retries=retries, quarantine=quarantine)
-        eng = cls(params, cfg, scfg)
-        eng.plan = plan
-        return eng
+        return from_compressed(
+            ckpt_dir, cfg, scfg, batcher=False, verify=verify,
+            load_retries=_normalize_load_retries(retries, load_retries),
+            quarantine=quarantine)
 
     # ---- batch generation (simple API, fixed same-length prompts) --------
     def generate(self, prompts: np.ndarray, n_new: int,
@@ -224,19 +278,6 @@ def _bucket_len(n: int, max_len: int) -> int:
     return min(b, max_len)
 
 
-def _scatter_rows(pool: Dict, src: Dict, slots: jax.Array) -> Dict:
-    """One whole-pool update: row j of every `src` cache leaf lands in row
-    slots[j] of the pool (runs leaves carry a leading stacked-layer axis,
-    so batch is axis 1; `pos` is batch-leading). slots[j] >= pool batch
-    drops row j — admission pads with out-of-range slots."""
-    runs = jax.tree.map(
-        lambda pool_l, src_l: pool_l.at[:, slots].set(
-            src_l.astype(pool_l.dtype), mode="drop"),
-        pool["runs"], src["runs"])
-    pos = pool["pos"].at[slots].set(src["pos"], mode="drop")
-    return {"runs": runs, "pos": pos}
-
-
 class ContinuousBatcher:
     """Slot-based continuous batching on top of per-slot caches.
 
@@ -259,23 +300,25 @@ class ContinuousBatcher:
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
                         scfg: ServeConfig, verify: bool = False,
-                        retries: int = 0, quarantine: bool = False,
+                        retries: Optional[int] = None,
+                        load_retries: int = 0,
+                        quarantine: Optional[bool] = None,
                         **kwargs) -> "ContinuousBatcher":
-        """Boot the batcher from a saved compressed checkpoint (see
-        ``Engine.from_compressed``; ``verify`` checks content hashes,
-        ``retries``/``quarantine`` make the load resilient). Extra
-        kwargs (``admission``, ``faults``, ``heartbeat``) pass through to
-        the constructor."""
-        from repro.core import compress as CC
-        params, plan = CC.load_plan(ckpt_dir, cfg=cfg, verify=verify,
-                                    retries=retries, quarantine=quarantine)
-        cb = cls(params, cfg, scfg, **kwargs)
-        cb.plan = plan
-        return cb
+        """Boot the batcher from a saved compressed checkpoint. Delegates
+        to the unified module-level :func:`from_compressed` (one loading
+        path shared with ``Engine``; ``verify`` checks content hashes,
+        ``load_retries``/``quarantine`` make the load resilient;
+        ``retries=`` is the deprecated pre-API spelling). Extra kwargs
+        (``admission``, ``faults``, ``heartbeat``, ``executables``) pass
+        through to the constructor."""
+        return from_compressed(
+            ckpt_dir, cfg, scfg, batcher=True, verify=verify,
+            load_retries=_normalize_load_retries(retries, load_retries),
+            quarantine=quarantine, **kwargs)
 
     def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig,
                  admission: Optional[adm.AdmissionConfig] = None,
-                 faults=None, heartbeat=None):
+                 faults=None, heartbeat=None, executables=None):
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.plan = None
         self.acfg = admission or adm.AdmissionConfig()
@@ -290,6 +333,12 @@ class ContinuousBatcher:
         self.admission = adm.AdmissionController(self.acfg, self._metrics)
         self._step_idx = 0
         self._progress = 0            # bumps on any forward progress
+        # streaming hooks (serve/frontdoor.py): called on the engine
+        # thread as tokens are emitted / requests reach terminal states /
+        # a quarantine rewinds a request's output
+        self.on_token: Optional[Callable[[Request, int], None]] = None
+        self.on_terminal: Optional[Callable[[Request], None]] = None
+        self.on_rewind: Optional[Callable[[Request], None]] = None
         kinds = {k for k, _ in cfg.layer_runs()}
         self.bucketed = (kinds <= {"attn", "swa"}
                          and not cfg.is_encoder_decoder)
@@ -310,35 +359,35 @@ class ContinuousBatcher:
             "prefill_retraces": 0, "decode_retraces": 0,
             "scatter_retraces": 0, "admissions": 0, "admitted": 0,
         }
+        # executable registry: all prefill/decode/scatter/purge dispatch
+        # goes through one object (serve/aot.py). The default traced
+        # registry reproduces the historical lazy-jit behavior (and its
+        # retrace counters) exactly; an AotRegistry swaps every entry
+        # point for an ahead-of-time compiled executable backed by the
+        # persistent cache.
+        self.exec = executables if executables is not None \
+            else aotlib.TracedRegistry(cfg, scfg)
+        self.exec.bind_stats(self.stats)
 
-        # trace-time side effects: the counters bump once per jit cache
-        # miss (tracing) and never during steady-state dispatch
-        def _decode_fn(p, c, t):
-            self.stats["decode_retraces"] += 1
-            return T.decode_step(p, cfg, c, t)
+    def warm_executables(self) -> None:
+        """Precompile (or cache-load) the full serving surface for this
+        batcher's ladder — a no-op for the traced registry; for an
+        ``AotRegistry`` this is the boot step that makes the steady-state
+        loop trace-free (see ``repro.serve.api.load_engine``)."""
+        self.exec.warm(self.ladder, self.bucketed)
 
-        def _prefill_fn(p, b):
-            self.stats["prefill_retraces"] += 1
-            return T.prefill(p, cfg, b, max_len=scfg.max_len)
+    # ---- streaming emission (frontdoor hooks) ----------------------------
+    def _emit_token(self, req: Request, tok: int) -> None:
+        if self.on_token is not None:
+            self.on_token(req, tok)
 
-        def _scatter_fn(pool, src, slots):
-            self.stats["scatter_retraces"] += 1
-            return _scatter_rows(pool, src, slots)
+    def _emit_terminal(self, req: Request) -> None:
+        if self.on_terminal is not None:
+            self.on_terminal(req)
 
-        def _purge_fn(pool, rows):
-            # zero cache rows + positions of quarantined slots so the
-            # next tenant (or a masked-out dead region) can never attend
-            # into poisoned state; rows >= batch are padding (dropped)
-            runs = jax.tree.map(
-                lambda leaf: leaf.at[:, rows].set(0, mode="drop"),
-                pool["runs"])
-            pos = pool["pos"].at[rows].set(0, mode="drop")
-            return {"runs": runs, "pos": pos}
-
-        self._decode = jax.jit(_decode_fn)
-        self._prefill1 = jax.jit(_prefill_fn)
-        self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
-        self._purge = jax.jit(_purge_fn, donate_argnums=(0,))
+    def _emit_rewind(self, req: Request) -> None:
+        if self.on_rewind is not None:
+            self.on_rewind(req)
 
     # ---- intake ----------------------------------------------------------
     @property
@@ -365,7 +414,9 @@ class ContinuousBatcher:
     # ---- admission -------------------------------------------------------
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
-        admit, _ = self.admission.take(len(free), time.perf_counter())
+        admit, shed = self.admission.take(len(free), time.perf_counter())
+        for req in shed:
+            self._emit_terminal(req)
         if not admit:
             return
         for req in admit:
@@ -405,10 +456,11 @@ class ContinuousBatcher:
             toks[j, :len(req.tokens)] = req.tokens
             lens[j] = len(req.tokens)
             slots[j] = slot
-        logits, c1 = self._prefill1(
+        logits, c1 = self.exec.prefill(
             self._params_now(), {"tokens": jnp.asarray(toks),
-                                 "lengths": jnp.asarray(lens)})
-        self.cache = self._scatter(self.cache, c1, jnp.asarray(slots))
+                                 "lengths": jnp.asarray(lens)},
+            level=self.level, bucket=Sb)
+        self.cache = self.exec.scatter(self.cache, c1, jnp.asarray(slots))
         last = np.array(logits[:, -1])                 # (B, V) writable host copy
         if self.faults is not None:
             for j in self.faults.prefill_rows_to_poison(
@@ -425,6 +477,7 @@ class ContinuousBatcher:
         for j, (req, slot) in enumerate(zip(admit, free)):
             if finite[j]:
                 req.out.append(int(tok[j]))
+                self._emit_token(req, int(tok[j]))
                 req.t_first = req.t_first or now
                 self._metrics.ttft_s.append(now - req.t_submit)
                 self.slots[slot] = req
@@ -438,10 +491,11 @@ class ContinuousBatcher:
 
     def _admit_exact(self, req: Request, slot: int) -> None:
         """Exact-length single-row admission (recurrent-state archs)."""
-        logits, c1 = self._prefill1(
-            self._params_now(), {"tokens": jnp.asarray(req.tokens[None, :])})
-        self.cache = self._scatter(self.cache, c1,
-                                   jnp.asarray([slot], dtype=np.int32))
+        logits, c1 = self.exec.prefill(
+            self._params_now(), {"tokens": jnp.asarray(req.tokens[None, :])},
+            level=self.level)
+        self.cache = self.exec.scatter(self.cache, c1,
+                                       jnp.asarray([slot], dtype=np.int32))
         last = np.array(logits[:, -1])
         self._poison_rid_rows([req], last)
         if not np.isfinite(last[0]).all():
@@ -450,6 +504,7 @@ class ContinuousBatcher:
             return
         t = int(last[0].argmax())
         req.out.append(t)
+        self._emit_token(req, t)
         now = time.perf_counter()
         req.t_first = req.t_first or now
         self._metrics.ttft_s.append(now - req.t_submit)
@@ -464,7 +519,7 @@ class ContinuousBatcher:
         pad = np.full((B,), B, dtype=np.int32)
         pad[:len(rows)] = rows
         jrows = jnp.asarray(pad)
-        self.cache = self._purge(self.cache, jrows)
+        self.cache = self.exec.purge(self.cache, jrows)
         self.tokens = self.tokens.at[jrows, 0].set(0, mode="drop")
         self._metrics.bump("slot_purges", len(rows))
 
@@ -488,16 +543,18 @@ class ContinuousBatcher:
             for j, s in enumerate(seqs):
                 toks[j, :len(s)] = s
                 lens[j] = len(s)
-            logits, _ = self._prefill1(
+            logits, _ = self.exec.prefill(
                 self._params_now(), {"tokens": jnp.asarray(toks),
-                                     "lengths": jnp.asarray(lens)})
+                                     "lengths": jnp.asarray(lens)},
+                level=self.level, bucket=Sb)
             last = np.array(logits[:, -1])
             self._poison_rid_rows(reqs + [None] * (B - len(reqs)), last)
             return np.isfinite(last).all(axis=-1)[:len(reqs)]
         verdict = np.zeros((len(reqs),), dtype=bool)
         for j, s in enumerate(seqs):
-            logits, _ = self._prefill1(self._params_now(),
-                                       {"tokens": jnp.asarray(s[None, :])})
+            logits, _ = self.exec.prefill(
+                self._params_now(), {"tokens": jnp.asarray(s[None, :])},
+                level=self.level)
             last = np.array(logits[:, -1])
             self._poison_rid_rows([reqs[j]], last)
             verdict[j] = bool(np.isfinite(last[0]).all())
@@ -540,6 +597,7 @@ class ContinuousBatcher:
         for req in collateral:
             req.out = []
             req.t_first = 0.0
+            self._emit_rewind(req)
             self.admission.requeue(req)
         for req in charge:
             req.retries += 1
@@ -553,9 +611,11 @@ class ContinuousBatcher:
                 self.failed.append(req)
                 self._metrics.bump("poison_failures")
                 self._progress += 1          # terminal transition
+                self._emit_terminal(req)
             else:
                 req.out = []
                 req.t_first = 0.0
+                self._emit_rewind(req)
                 self.admission.requeue(req)
 
     # ---- step loop -------------------------------------------------------
@@ -580,8 +640,8 @@ class ContinuousBatcher:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return 0
-        logits, self.cache = self._decode(self._params_now(), self.cache,
-                                          self.tokens)
+        logits, self.cache = self.exec.decode(
+            self._params_now(), self.cache, self.tokens, level=self.level)
         last = np.array(logits[:, -1])                 # (B, V) writable host copy
         if self.faults is not None:
             for row in self.faults.decode_rows_to_poison(idx, live):
@@ -596,6 +656,7 @@ class ContinuousBatcher:
         for i in good:
             req = self.slots[i]
             req.out.append(int(nxt[i]))
+            self._emit_token(req, int(nxt[i]))
             self._progress += 1
             if len(req.out) >= req.n_new:
                 req.t_done = time.perf_counter()
@@ -603,6 +664,7 @@ class ContinuousBatcher:
                 self._metrics.bump("completed")
                 self.done.append(req)
                 self.slots[i] = None
+                self._emit_terminal(req)
         if bad:
             ambiguous = len(bad) == len(live) and len(live) > 1
             reqs = [self.slots[i] for i in bad]

@@ -1,0 +1,113 @@
+"""ISSUE 7 AOT coverage: the persistent-executable registry must only
+ever change COST, never results. Oracle: the traced registry's token
+stream. Asserts the boot contract (second boot performs zero compiles),
+fingerprint isolation (a different artifact never replays a cached
+executable), and the corruption fallback ladder.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.models import transformer as T
+from repro.serve import aot as aotlib
+from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
+
+CFG = get_config("llama-mini").replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, rank_multiple=1)
+SCFG = ServeConfig(batch=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def comp():
+    params, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)}]
+    c, _ = CC.build_plan_and_params(
+        params, CFG, CC.CompressionConfig(ratio=0.4), calib)
+    return c
+
+
+def _workload(n=4, n_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, n_new=n_new,
+                    tokens=rng.integers(0, CFG.vocab_size, size=(7,),
+                                        dtype=np.int32))
+            for i in range(n)]
+
+
+def _drain(params, registry=None):
+    cb = ContinuousBatcher(params, CFG, SCFG, executables=registry)
+    cb.warm_executables()
+    reqs = _workload()
+    for r in reqs:
+        cb.submit(r)
+    res = cb.run_until_drained()
+    assert res.status == "drained"
+    return {r.rid: list(r.out) for r in res}, cb.stats
+
+
+def _registry(comp, cache_dir, fingerprint=None):
+    return aotlib.AotRegistry(
+        CFG, SCFG,
+        fingerprint or aotlib.live_fingerprint(comp, CFG),
+        cache_dir=str(cache_dir))
+
+
+def test_aot_boot_token_identical_and_second_boot_compile_free(
+        tmp_path, comp):
+    oracle, tstats = _drain(comp)                       # traced reference
+    assert tstats["decode_retraces"] == 1
+
+    cold, s1 = _drain(comp, _registry(comp, tmp_path))  # boot 1: compiles
+    assert cold == oracle
+    assert s1["aot_compiles"] > 0 and s1["aot_cache_hits"] == 0
+    assert s1["decode_retraces"] == 0                   # nothing traced lazily
+
+    warm, s2 = _drain(comp, _registry(comp, tmp_path))  # boot 2: cache only
+    assert warm == oracle
+    assert s2["aot_compiles"] == 0, s2
+    assert s2["aot_cache_hits"] > 0
+    assert s2["aot_fallbacks"] == 0 and s2["aot_deser_failures"] == 0
+
+
+def test_fingerprint_mismatch_recompiles_not_replays(tmp_path, comp):
+    _drain(comp, _registry(comp, tmp_path))             # populate cache
+    # same shapes, different artifact identity: the cache must MISS —
+    # replaying another artifact's executable would be silently wrong
+    # if shapes ever coincided across incompatible artifacts
+    other, s = _drain(comp, _registry(comp, tmp_path,
+                                      fingerprint="sha256:deadbeef"))
+    assert s["aot_compiles"] > 0
+    assert s["aot_cache_hits"] == 0
+    oracle, _ = _drain(comp)
+    assert other == oracle
+
+
+def test_corrupt_cache_entry_falls_back_to_compile(tmp_path, comp):
+    reg = _registry(comp, tmp_path)
+    _drain(comp, reg)                                   # populate cache
+    for key in reg.cache.keys():                        # torch every entry
+        with open(reg.cache.path(key), "wb") as f:
+            f.write(b"not an executable")
+    redo, s = _drain(comp, _registry(comp, tmp_path))
+    assert s["aot_deser_failures"] > 0
+    assert s["aot_compiles"] == s["aot_deser_failures"]  # each re-made once
+    oracle, _ = _drain(comp)
+    assert redo == oracle
+
+
+def test_cache_key_separates_roles_variants_and_config(comp):
+    fp = aotlib.live_fingerprint(comp, CFG)
+    sig = "sig"
+    k = aotlib.cache_key(fp, "decode", (0,), sig, SCFG, CFG)
+    assert k != aotlib.cache_key(fp, "prefill", (0,), sig, SCFG, CFG)
+    assert k != aotlib.cache_key(fp, "decode", (1,), sig, SCFG, CFG)
+    assert k != aotlib.cache_key(fp, "decode", (0,), sig,
+                                 ServeConfig(batch=4, max_len=32), CFG)
+    assert k != aotlib.cache_key("sha256:other", "decode", (0,), sig,
+                                 SCFG, CFG)
+    assert k == aotlib.cache_key(fp, "decode", (0,), sig, SCFG, CFG)

@@ -1,0 +1,119 @@
+"""ISSUE 7 front-door coverage: per-token streaming must carry exactly
+the drained output, intake backpressure must reject before the engine is
+ever involved, and the router must place requests deterministically by
+replica load and spill on pushback.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import admission as adm
+from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
+from repro.serve.frontdoor import FrontDoor, Router, merge_drain_results
+
+CFG = get_config("llama-mini").replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256)
+SCFG = ServeConfig(batch=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    return p
+
+
+def _prompts(n, seed=0, length=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=(length,), dtype=np.int32)
+            for _ in range(n)]
+
+
+def _oracle(params, prompts, n_new=5):
+    cb = ContinuousBatcher(params, CFG, SCFG)
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=i, tokens=p.copy(), n_new=n_new))
+    res = cb.run_until_drained()
+    assert res.status == "drained"
+    return {r.rid: list(r.out) for r in res}
+
+
+def test_streamed_tokens_equal_drained_tokens(params):
+    prompts = _prompts(6)
+    oracle = _oracle(params, prompts)
+    fd = FrontDoor(ContinuousBatcher(params, CFG, SCFG)).start()
+    streams = [fd.submit(p, 5, rid=i) for i, p in enumerate(prompts)]
+    assert all(s is not None for s in streams)
+    # iterate BEFORE drain: tokens must arrive as they are emitted
+    collected = [[t for t in s] for s in streams]
+    res = fd.drain(timeout=120)
+    fd.close()
+    assert res.status == "drained" and len(res) == len(prompts)
+    for i, s in enumerate(streams):
+        assert s.status == adm.DONE
+        assert collected[i] == oracle[i]       # the live stream
+        assert s.tokens() == oracle[i]         # the terminal snapshot
+        assert s.result(1).rid == i
+        assert s.rewinds == 0
+
+
+def test_intake_backpressure_rejects_before_the_engine(params):
+    fd = FrontDoor(ContinuousBatcher(params, CFG, SCFG), intake_bound=2)
+    # engine thread NOT started: the bound is the only admission control
+    assert fd.submit(_prompts(1)[0], 2, rid=0) is not None
+    assert fd.submit(_prompts(1)[0], 2, rid=1) is not None
+    assert fd.submit(_prompts(1)[0], 2, rid=2) is None    # full intake
+    assert fd.load() == 2
+
+
+def test_admission_rejects_surface_as_terminal_streams(params):
+    acfg = adm.AdmissionConfig(max_queue=1)
+    fd = FrontDoor(ContinuousBatcher(params, CFG, SCFG, admission=acfg),
+                   intake_bound=16)
+    prompts = _prompts(6, seed=3)
+    streams = [fd.submit(p, 3, rid=i) for i, p in enumerate(prompts)]
+    assert all(s is not None for s in streams)  # intake took everything
+    fd.start()
+    res = fd.drain(timeout=120)
+    fd.close()
+    # every stream reached a terminal state — sheds included, so a
+    # client blocked on result() is never left hanging
+    for s in streams:
+        assert s.result(1).status in (adm.DONE, adm.SHED_QUEUE_FULL)
+    shed = [s for s in streams if s.status == adm.SHED_QUEUE_FULL]
+    assert len(shed) == len(res.rejected)
+    assert len(res) + len(shed) == len(prompts)
+
+
+def test_router_balances_by_load_and_spills_on_pushback(params):
+    doors = [FrontDoor(ContinuousBatcher(params, CFG, SCFG),
+                       intake_bound=4) for _ in range(2)]
+    router = Router(doors)
+    prompts = _prompts(8, seed=1)
+    streams = [router.submit(p, 2) for p in prompts]
+    assert all(s is not None for s in streams)
+    # engines not started yet: load == intake depth, so placement is the
+    # deterministic least-loaded alternation 4/4
+    assert [d.load() for d in doors] == [4, 4]
+    # both intakes full -> every replica pushes back -> None
+    assert router.submit(prompts[0], 2) is None
+    router.start()
+    res = router.drain_all(timeout=120)
+    router.close()
+    assert res.status == "drained" and len(res) == len(prompts)
+    oracle = _oracle(params, prompts, n_new=2)
+    got = sorted([s.tokens() for s in streams])
+    assert got == sorted(oracle.values())
+
+
+def test_merge_drain_results_takes_worst_status():
+    a = type("R", (), {})  # stand-in rows are fine; merge only concatenates
+    from repro.serve.engine import DrainResult
+    r1 = DrainResult([a], "drained", [], [], [], [])
+    r2 = DrainResult([a, a], "timeout", [a], [], [], [])
+    m = merge_drain_results([r1, r2])
+    assert m.status == "timeout"
+    assert len(m) == 3 and len(m.undrained) == 1
+    assert merge_drain_results([]).status == "drained"

@@ -244,7 +244,7 @@ def test_corrupt_artifact_quarantined(tmp_path, comp, kind):
     FI.corrupt_artifact(f"{d}/{CC.ARTIFACT_NAME}", kind=kind, seed=1)
     with pytest.raises(store.IntegrityError):
         ContinuousBatcher.from_compressed(
-            d, cfg, SCFG, verify=True, retries=1, quarantine=True)
+            d, cfg, SCFG, verify=True, load_retries=1, quarantine=True)
     # the poisoned bytes were moved aside, not deleted
     assert (tmp_path / kind / f"{CC.ARTIFACT_NAME}.quarantined").exists()
     assert not (tmp_path / kind / CC.ARTIFACT_NAME).exists()
