@@ -1,5 +1,5 @@
 """Calibration-capture throughput: eager-host oracle vs jit/device
-streaming capture (the PR-2 tentpole; DESIGN.md §6).
+streaming capture (the PR-2 tentpole; DESIGN.md §7).
 
 Three execution paths per grid cell:
   eager-host        the fp64 numpy Collector — forward runs op-by-op with a

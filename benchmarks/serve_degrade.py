@@ -29,6 +29,7 @@ from benchmarks.common import ROOT, cached, calib_batches
 from repro.configs import get_config
 from repro.core import compress as CC
 from repro.models import transformer as T
+from repro.obs import trace as obs_trace
 from repro.serve import admission as adm
 from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
 
@@ -91,25 +92,61 @@ def _measure(cb, cfg, grid, reps=MEASURE_REPS):
     assert res.status == "drained", res.status
     best = None
     for rep in range(reps):
-        work = _workload(grid, cfg.vocab_size, rid_base=rep * 1000)
-        steps0 = cb.metrics()["steps"]
-        for r in work:
-            cb.submit(r)
-        t0 = time.perf_counter()
-        res = cb.run_until_drained()
-        dt = time.perf_counter() - t0
-        assert res.status == "drained", res.status
-        steps = cb.metrics()["steps"] - steps0
-        toks = sum(len(r.out) for r in work)
-        ttft = [r.t_first - r.t_submit for r in work]
-        m = {"tokens_per_s": toks / dt,
-             "ms_per_step": dt / max(1, steps) * 1e3,
-             "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3)}
+        m = _drain_once(cb, cfg, grid, rid_base=rep * 1000)
         if best is None or m["ms_per_step"] < best["ms_per_step"]:
             best = m
     best["_residency"] = cb.metrics()["rank_residency"]
     best["_rank_max"] = max(_ranks(cb.ladder[cb.level]) or {0})
     return best
+
+
+def _drain_once(cb, cfg, grid, rid_base):
+    """One timed drain of a fresh workload; the metric triple."""
+    work = _workload(grid, cfg.vocab_size, rid_base=rid_base)
+    steps0 = cb.metrics()["steps"]
+    for r in work:
+        cb.submit(r)
+    t0 = time.perf_counter()
+    res = cb.run_until_drained()
+    dt = time.perf_counter() - t0
+    assert res.status == "drained", res.status
+    steps = cb.metrics()["steps"] - steps0
+    toks = sum(len(r.out) for r in work)
+    ttft = [r.t_first - r.t_submit for r in work]
+    return {"tokens_per_s": toks / dt,
+            "ms_per_step": dt / max(1, steps) * 1e3,
+            "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3)}
+
+
+def _measure_trace_overhead(comp, cfg, grid, reps=MEASURE_REPS):
+    """The tracing-overhead cell (DESIGN.md §6.1's "cheap enough to leave
+    on" claim, measured): the SAME full-rank batcher drains the same
+    workload shape alternately with tracing disabled and enabled (a
+    fresh in-memory Tracer per rep; nothing written), best-of-N per arm.
+    Interleaving the arms in one process gives scheduler noise an equal
+    shot at both, so the off/on ratio is meaningful even when absolute
+    tok/s swings — scripts/ci.sh gates that ratio at >=0.95."""
+    cb = _make_batcher(comp, cfg, grid)
+    warm = _workload(grid, cfg.vocab_size, seed=1, rid_base=90_000)
+    for r in warm:
+        cb.submit(r)
+    res = cb.run_until_drained()
+    assert res.status == "drained", res.status
+    best = {"off": None, "on": None}
+    for rep in range(reps):
+        for arm in ("off", "on"):
+            base = 100_000 + rep * 2000 + (1000 if arm == "on" else 0)
+            if arm == "on":
+                obs_trace.enable(obs_trace.Tracer())
+            try:
+                m = _drain_once(cb, cfg, grid, rid_base=base)
+            finally:
+                if arm == "on":
+                    obs_trace.disable()
+            if best[arm] is None or m["ms_per_step"] < \
+                    best[arm]["ms_per_step"]:
+                best[arm] = m
+    return best["off"], best["on"]
 
 
 def run(force: bool = False, smoke: bool = False):
@@ -152,6 +189,16 @@ def run(force: bool = False, smoke: bool = False):
                      "rank_residency": residency, **m})
         print(f"  sdg elastic residency={residency}: "
               f"{m['tokens_per_s']:.0f} tok/s", flush=True)
+        # tracing-overhead pair: off vs on, interleaved in this process
+        off, on = _measure_trace_overhead(comp, cfg, grid)
+        for mode, m in (("trace-off", off), ("trace-on", on)):
+            rows.append({"bench": "serve_degrade",
+                         "config": {"model": f"drank@{RATIO:.0%}",
+                                    "mode": mode, "level": 0}, **m})
+        ratio = on["tokens_per_s"] / off["tokens_per_s"]
+        print(f"  sdg tracing overhead: {off['tokens_per_s']:.0f} -> "
+              f"{on['tokens_per_s']:.0f} tok/s "
+              f"(ratio {ratio:.3f})", flush=True)
         return {"rows": rows}
 
     out = cached(name, compute, force)

@@ -26,6 +26,13 @@ unscaled (scale 1), exactly as before.
 equivalent ``params_per_s`` (dense parameters decomposed per second).
 ``--update`` refreshes a baseline in place (recording the calibration
 row) after an intentional perf change.
+
+**Ratio mode** (``--ratio NUM_SEL DEN_SEL --min-ratio 0.95``): instead
+of diffing against a baseline, gate the metric ratio of two rows inside
+the freshly emitted file itself, selected by ``config`` key=value pairs
+— e.g. the tracing-overhead pair ``mode=trace-on`` vs
+``mode=trace-off`` from one interleaved run, where the ratio is immune
+to the machine-speed question entirely.
 """
 from __future__ import annotations
 
@@ -133,6 +140,36 @@ def gate(current_path: str, baseline_path: str, threshold: float,
     return 0
 
 
+def _select(rows, selector: str):
+    """The single row whose config matches every ``key=value`` pair in
+    ``selector`` (comma-separated; values compared as strings)."""
+    pairs = [kv.split("=", 1) for kv in selector.split(",")]
+    hits = [r for r in rows
+            if all(str(r.get("config", {}).get(k)) == v for k, v in pairs)]
+    if len(hits) != 1:
+        raise SystemExit(f"bench_gate: selector {selector!r} matched "
+                         f"{len(hits)} rows (want exactly 1)")
+    return hits[0]
+
+
+def ratio_gate(current_path: str, num_sel: str, den_sel: str,
+               min_ratio: float, metric: str = "tokens_per_s") -> int:
+    """Gate the metric ratio of two rows in the SAME freshly emitted
+    file — e.g. tracing-on vs tracing-off throughput. Both rows come
+    from one interleaved run on one machine, so no baseline file and no
+    machine calibration is involved: the ratio is the claim."""
+    with open(current_path) as f:
+        rows = json.load(f)
+    num = _select(rows, num_sel)
+    den = _select(rows, den_sel)
+    ratio = num[metric] / den[metric] if den[metric] > 0 else float("inf")
+    ok = ratio >= min_ratio
+    print(f"bench_gate: {metric} ratio [{num_sel}] / [{den_sel}] = "
+          f"{num[metric]:.0f} / {den[metric]:.0f} = {ratio:.3f} "
+          f"({'ok' if ok else 'FAIL'}, floor {min_ratio})")
+    return 0 if ok else 1
+
+
 def update(current_path: str, baseline_path: str) -> int:
     """Refresh the baseline from current rows + a calibration row scored
     on THIS machine (so future gates on other machines normalize to it)."""
@@ -149,7 +186,7 @@ def update(current_path: str, baseline_path: str) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
-    ap.add_argument("baseline")
+    ap.add_argument("baseline", nargs="?", default=None)
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional metric drop (default 0.25)")
     ap.add_argument("--metric", default="tokens_per_s",
@@ -158,7 +195,20 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="refresh the baseline from current (records a "
                          "per-machine calibration row) instead of gating")
+    ap.add_argument("--ratio", nargs=2, metavar=("NUM_SEL", "DEN_SEL"),
+                    help="gate the metric ratio of two rows inside "
+                         "CURRENT (selected by config key=value[,k=v]) "
+                         "instead of diffing against a baseline — e.g. "
+                         "--ratio mode=trace-on mode=trace-off")
+    ap.add_argument("--min-ratio", type=float, default=0.95,
+                    help="with --ratio: minimum num/den metric ratio "
+                         "(default 0.95)")
     args = ap.parse_args(argv)
+    if args.ratio:
+        return ratio_gate(args.current, args.ratio[0], args.ratio[1],
+                          args.min_ratio, args.metric)
+    if args.baseline is None:
+        ap.error("baseline is required unless --ratio is given")
     if args.update:
         return update(args.current, args.baseline)
     return gate(args.current, args.baseline, args.threshold, args.metric)

@@ -1,6 +1,6 @@
 """Rank allocation: the paper's Lagrange-multiplier closed form (eq 13–19),
 the β attention rebalance (eq 9–12), and the budget-exact integerization /
-MXU-alignment layer (beyond-paper; DESIGN.md §6.1).
+MXU-alignment layer (beyond-paper; DESIGN.md §7.1).
 
 Optimization problem:   min Σ_g R_eff(g)/k_g   s.t.  Σ_g k_g ω_g = T_budget
 Closed form:            k_g ∝ sqrt(R_eff(g) / ω_g)

@@ -19,7 +19,7 @@ targets exist:
                    ``gram_blocked`` on TPU, XLA dot elsewhere), partials are
                    threaded functionally through donated accumulators, and
                    the host flushes them into fp64 sums every few batches
-                   (DESIGN.md §6: fp32 partials + fp64 host-sum keep the
+                   (DESIGN.md §7: fp32 partials + fp64 host-sum keep the
                    paper's fp64 S-matrix while calibration runs compiled
                    and multi-device; on a mesh, capture and reduction are
                    pipelined two-stage ``shard_map`` steps, with large
@@ -44,6 +44,7 @@ from repro.config import ModelConfig
 from repro.dist.sharding import (P, axis_group_size, combined_axis_index,
                                  logical_spec, shard_map)
 from repro.models.params import Params, set_capture
+from repro.obs import trace
 
 
 class Collector:
@@ -522,25 +523,27 @@ class StreamingCalibrator:
     # -- ingest / flush / finalize -----------------------------------------
     def ingest(self, batch: Dict) -> None:
         """Fold one calibration batch into the device accumulators."""
-        if self._accs is None:
-            self._dims = discover_capture_dims(self.tagged, self.cfg, batch)
-            self._routes = {t: self._route_of(t, d)
-                            for t, d in self._dims.items()}
-            self._accs = self._fresh_accs()
+        with trace.span("calib_ingest", since_flush=self._since_flush):
+            if self._accs is None:
+                self._dims = discover_capture_dims(self.tagged, self.cfg,
+                                                   batch)
+                self._routes = {t: self._route_of(t, d)
+                                for t, d in self._dims.items()}
+                self._accs = self._fresh_accs()
+                if self.mesh is None:
+                    self._step = self._build_step()
+                else:
+                    self._init_chol(self._accs)
+                    self._capture, self._folds = self._build_mesh_steps()
             if self.mesh is None:
-                self._step = self._build_step()
+                self._accs = self._step(self._accs, batch)
             else:
-                self._init_chol(self._accs)
-                self._capture, self._folds = self._build_mesh_steps()
-        if self.mesh is None:
-            self._accs = self._step(self._accs, batch)
-        else:
-            # dispatch the next capture BEFORE reducing the previous
-            # batch's partials: both are queued asynchronously, so the
-            # fold's collectives overlap the new forward pass
-            parts = self._capture(batch)
-            self._fold_pending()
-            self._pending = parts
+                # dispatch the next capture BEFORE reducing the previous
+                # batch's partials: both are queued asynchronously, so the
+                # fold's collectives overlap the new forward pass
+                parts = self._capture(batch)
+                self._fold_pending()
+                self._pending = parts
         self._since_flush += 1
         if self._since_flush >= self.flush_every:
             self.flush()
@@ -562,6 +565,10 @@ class StreamingCalibrator:
         there is nothing to flush into fp64)."""
         if self._accs is None or self._since_flush == 0:
             return
+        with trace.span("calib_flush", batches=self._since_flush):
+            self._flush_inner()
+
+    def _flush_inner(self) -> None:
         self._fold_pending()
         host = jax.device_get({
             tag: {k: v for k, v in acc.items() if k != "chol"}
@@ -600,6 +607,10 @@ class StreamingCalibrator:
         Cholesky factor as ``col.chol[tag]`` and have no Gram entry; on a
         mesh the per-shard factors are tree-reduced first (exact — see
         ``numerics_jax.tree_reduce_factors``)."""
+        with trace.span("calib_finalize"):
+            return self._finalize_inner()
+
+    def _finalize_inner(self) -> Collector:
         self.flush()
         col = Collector()
         for tag, acc in self._host.items():

@@ -36,6 +36,7 @@ from repro.core.groups import (BETA_MAP, Group, MatrixRef, build_groups,
                                enumerate_matrices)
 from repro.models import transformer as T
 from repro.models.params import Params
+from repro.obs import trace
 
 METHODS = ("svd", "fwsvd", "asvd", "svdllm", "basis", "drank", "dranke")
 
@@ -239,55 +240,58 @@ def _decompose_groups_device(
                            []).append(g)
     out: Dict[str, Tuple] = {}
     for (d1, nd2, n, kmax), gs in sorted(buckets.items()):
-        W = np.stack([
-            np.concatenate([_member_weight(lp, m, dtype=np.float32)
-                            for m in g.members], axis=1) for g in gs])
-        kwargs: Dict = {}
-        if ccfg.method == "fwsvd":
-            # same floor as num.diag_whitener: zero Fisher rows (dead
-            # units) must not divide the basis by zero
-            kwargs["diag"] = np.maximum(np.stack(
-                [fisher[g.members[0].tag] for g in gs]), 1e-8
-            ).astype(np.float32)
-        elif ccfg.method == "asvd":
-            kwargs["diag"] = np.stack([np.power(np.maximum(np.mean(
-                [col.mean_abs(m.tag) for m in g.members], axis=0),
-                1e-8), ccfg.asvd_alpha) for g in gs]).astype(np.float32)
-        elif ccfg.method != "svd":               # cholesky family
-            tags = [m.tag for g in gs for m in g.members]
-            if col.chol and all(t in col.chol for t in tags):
-                Rs = np.stack([np.stack([col.chol[m.tag].astype(np.float32)
-                                         for m in g.members]) for g in gs])
-                kwargs["factor"] = numj.combine_factors(
-                    _shard_group_batch(jnp.asarray(Rs), mesh))
-            else:
-                # buckets mixing whitened and plain tags fall back to
-                # Grams, substituting RᵀR for factor-only tags
-                kwargs["gram"] = _shard_group_batch(jnp.asarray(np.stack(
-                    [np.sum([_gram_of(col, m.tag) for m in g.members],
-                            axis=0) for g in gs]).astype(np.float32)),
-                    mesh)
-                kwargs["damp"] = ccfg.damp
-        rsvd = int(bool(ccfg.rsvd_threshold)
-                   and min(d1, nd2) >= ccfg.rsvd_threshold)
-        sig, B, C = numj.decompose(
-            _shard_group_batch(jnp.asarray(W), mesh), k=kmax, rsvd=rsvd,
-            rsvd_oversample=ccfg.rsvd_oversample,
-            rsvd_iters=ccfg.rsvd_iters, **kwargs)
-        sig = np.asarray(sig, dtype=np.float64)
-        B = np.asarray(B)
-        C = np.asarray(C)
-        if not np.isfinite(sig).all():
-            # device cholesky_escalate signals failure as NaNs; fail as
-            # loudly as the host oracle does on non-finite Grams
-            bad = [gs[i].gid for i in range(len(gs))
-                   if not np.isfinite(sig[i]).all()]
-            raise np.linalg.LinAlgError(
-                f"device decomposition produced non-finite spectra for "
-                f"groups {bad} (bucket d1={d1}, n·d2={nd2}) — "
-                f"non-finite calibration Grams or weights")
-        for i, g in enumerate(gs):
-            out[g.gid] = (sig[i], B[i], C[i])
+        with trace.span("decompose_bucket", d1=d1, nd2=nd2,
+                        kmax=kmax, n_groups=len(gs)):
+            W = np.stack([
+                np.concatenate([_member_weight(lp, m, dtype=np.float32)
+                                for m in g.members], axis=1) for g in gs])
+            kwargs: Dict = {}
+            if ccfg.method == "fwsvd":
+                # same floor as num.diag_whitener: zero Fisher rows (dead
+                # units) must not divide the basis by zero
+                kwargs["diag"] = np.maximum(np.stack(
+                    [fisher[g.members[0].tag] for g in gs]), 1e-8
+                ).astype(np.float32)
+            elif ccfg.method == "asvd":
+                kwargs["diag"] = np.stack([np.power(np.maximum(np.mean(
+                    [col.mean_abs(m.tag) for m in g.members], axis=0),
+                    1e-8), ccfg.asvd_alpha) for g in gs]).astype(np.float32)
+            elif ccfg.method != "svd":               # cholesky family
+                tags = [m.tag for g in gs for m in g.members]
+                if col.chol and all(t in col.chol for t in tags):
+                    Rs = np.stack(
+                        [np.stack([col.chol[m.tag].astype(np.float32)
+                                   for m in g.members]) for g in gs])
+                    kwargs["factor"] = numj.combine_factors(
+                        _shard_group_batch(jnp.asarray(Rs), mesh))
+                else:
+                    # buckets mixing whitened and plain tags fall back to
+                    # Grams, substituting RᵀR for factor-only tags
+                    kwargs["gram"] = _shard_group_batch(jnp.asarray(np.stack(
+                        [np.sum([_gram_of(col, m.tag) for m in g.members],
+                                axis=0) for g in gs]).astype(np.float32)),
+                        mesh)
+                    kwargs["damp"] = ccfg.damp
+            rsvd = int(bool(ccfg.rsvd_threshold)
+                       and min(d1, nd2) >= ccfg.rsvd_threshold)
+            sig, B, C = numj.decompose(
+                _shard_group_batch(jnp.asarray(W), mesh), k=kmax, rsvd=rsvd,
+                rsvd_oversample=ccfg.rsvd_oversample,
+                rsvd_iters=ccfg.rsvd_iters, **kwargs)
+            sig = np.asarray(sig, dtype=np.float64)
+            B = np.asarray(B)
+            C = np.asarray(C)
+            if not np.isfinite(sig).all():
+                # device cholesky_escalate signals failure as NaNs; fail as
+                # loudly as the host oracle does on non-finite Grams
+                bad = [gs[i].gid for i in range(len(gs))
+                       if not np.isfinite(sig[i]).all()]
+                raise np.linalg.LinAlgError(
+                    f"device decomposition produced non-finite spectra for "
+                    f"groups {bad} (bucket d1={d1}, n·d2={nd2}) — "
+                    f"non-finite calibration Grams or weights")
+            for i, g in enumerate(gs):
+                out[g.gid] = (sig[i], B[i], C[i])
     return out
 
 
@@ -379,9 +383,11 @@ def build_plan_and_params(
     needs_col = ccfg.method != "svd" or ccfg.refine
     col = collector
     if col is None and needs_col:
-        col = calibrate(lp, cfg, calib_batches, streaming=streaming,
-                        mesh=mesh, whiten_tags=whiten_tags,
-                        shard_grams_above=shard_grams_above)
+        with trace.span("calibrate", batches=len(calib_batches),
+                        streaming=streaming):
+            col = calibrate(lp, cfg, calib_batches, streaming=streaming,
+                            mesh=mesh, whiten_tags=whiten_tags,
+                            shard_grams_above=shard_grams_above)
     fisher = (fisher_rows(lp, cfg, calib_batches)
               if ccfg.method == "fwsvd" else None)
 
@@ -406,14 +412,15 @@ def build_plan_and_params(
         dec = _decompose_groups_device(lp, groups, ccfg, col, fisher, mesh)
         sig_of = {gid: d[0] for gid, d in dec.items()}
     else:
-        for g in groups:
-            W_cat = np.concatenate(
-                [_member_weight(lp, m) for m in g.members], axis=1)
-            wh = _whitener_for(g, ccfg, col, fisher) if col or fisher \
-                else num.identity_whitener()
-            U, sig, Vt = num.whitened_svd(W_cat, wh)
-            svds[g.gid] = (U, sig, Vt, wh)
-            sig_of[g.gid] = sig
+        with trace.span("decompose_host", n_groups=len(groups)):
+            for g in groups:
+                W_cat = np.concatenate(
+                    [_member_weight(lp, m) for m in g.members], axis=1)
+                wh = _whitener_for(g, ccfg, col, fisher) if col or fisher \
+                    else num.identity_whitener()
+                U, sig, Vt = num.whitened_svd(W_cat, wh)
+                svds[g.gid] = (U, sig, Vt, wh)
+                sig_of[g.gid] = sig
     gspecs: List[alloc.GroupSpec] = []
     for g in groups:
         gspecs.append(alloc.GroupSpec(
@@ -501,11 +508,11 @@ def build_plan_and_params(
         # per-shard factors and tree-reduces them, so it qualifies)
         wt = (frozenset(col.chol) if col is not None and col.chol
               and streaming else None)
-        new_lp = refine_coefficients(lp, new_lp, cfg, groups,
-                                     calib_batches, streaming=streaming,
-                                     device=device, mesh=mesh,
-                                     whiten_tags=wt,
-                                     shard_grams_above=shard_grams_above)
+        with trace.span("refine", n_groups=len(groups)):
+            new_lp = refine_coefficients(
+                lp, new_lp, cfg, groups, calib_batches,
+                streaming=streaming, device=device, mesh=mesh,
+                whiten_tags=wt, shard_grams_above=shard_grams_above)
     return new_lp, plan
 
 

@@ -7,7 +7,7 @@ rank-k approximation is the truncated SVD of ``S·W`` with ``S = Lᵀ``,
 reconstructed as ``W ≈ S⁻¹ (U_k Σ_k) V_kᵀ = B C``.
 
 All of this runs in numpy float64 on host — TPUs have no fp64, and the
-paper explicitly keeps S in fp64 (DESIGN.md §6.3).
+paper explicitly keeps S in fp64 (DESIGN.md §7.2).
 """
 from __future__ import annotations
 

@@ -136,6 +136,26 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--stream", action="store_true",
                     help="drive the workload through the async front "
                          "door (token streaming) even with --replicas 1")
+    # --- observability (DESIGN.md §6) -------------------------------------
+    ap.add_argument("--trace-out", default="",
+                    help="record the run as Chrome-trace JSON here "
+                         "(load in https://ui.perfetto.dev or "
+                         "chrome://tracing)")
+    ap.add_argument("--device-trace-dir", default="",
+                    help="with --trace-out or alone: capture a "
+                         "jax.profiler device timeline into this logdir")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the live v2 metrics snapshot here on a "
+                         "fixed cadence (plus once at the end)")
+    ap.add_argument("--metrics-interval-s", type=float, default=1.0,
+                    help="cadence for --metrics-json")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus text metrics on this port "
+                         "(0 = ephemeral; -1 = off)")
+    ap.add_argument("--flightrec-dir", default="",
+                    help="arm the flight recorder: dump a debug artifact "
+                         "here whenever a request fails typed or a drain "
+                         "ends non-drained")
     return ap
 
 

@@ -13,11 +13,16 @@ intake an explicit, deterministic policy object:
   FIFO order, before they waste a prefill: shedding work that already
   missed its SLO is the deterministic policy (no sampling, no load
   heuristics — two identical runs shed identical sets).
-* **serve metrics** — one structured dict (queue depth/peak, shed and
-  poison counters, TTFT and queue-wait percentiles, rank-bucket
+* **serve metrics** — one structured snapshot (queue depth/peak, shed
+  and poison counters, TTFT and queue-wait percentiles, rank-bucket
   residency) shared by the engine, the degradation benchmark, the chaos
   tests and ``launch/serve.py --stats-json``, so tests assert on exactly
-  the counters operators watch.
+  the counters operators watch. Since the observability PR the samples
+  behind the percentiles live in **bounded reservoirs**
+  (``obs.metrics.Histogram`` — the old per-request ``ttft_s`` lists grew
+  one float per request forever) and the snapshot is the versioned
+  ``repro.serve.metrics/v2`` schema, with every pre-v2 top-level key
+  kept as a deprecated alias for one release.
 
 Typed request terminal states live here too: a request ends exactly one
 of ``done`` / ``shed_queue_full`` / ``shed_deadline`` / ``failed_poison``
@@ -28,7 +33,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
+from repro.obs.metrics import Histogram, MetricsRegistry
 
 # Terminal request statuses (Request.status)
 QUEUED = "queued"
@@ -59,50 +64,102 @@ class AdmissionConfig:
 
 
 class ServeMetrics:
-    """Counters + latency samples behind ``ContinuousBatcher.metrics()``."""
+    """Counters + latency reservoirs behind ``ContinuousBatcher.metrics()``.
 
-    def __init__(self) -> None:
-        self.counters: Dict[str, int] = {
-            "submitted": 0, "accepted": 0, "completed": 0,
-            "shed_queue_full": 0, "shed_deadline": 0,
-            "poison_events": 0, "poison_retries": 0, "poison_failures": 0,
-            "slot_purges": 0, "steps": 0, "peak_queue_depth": 0,
-        }
-        self.ttft_s: List[float] = []        # submit -> first token
-        self.queue_wait_s: List[float] = []  # submit -> admission
+    Backed by an ``obs.metrics.MetricsRegistry``: counters are typed,
+    latency samples go into bounded reservoirs (fixed memory no matter
+    how many requests pass through — the pre-v2 ``ttft_s``/
+    ``queue_wait_s`` lists grew unboundedly), and ``snapshot()`` emits
+    the versioned v2 schema with the legacy keys preserved as a
+    deprecated alias for one release.
+    """
+
+    COUNTER_KEYS = ("submitted", "accepted", "completed",
+                    "shed_queue_full", "shed_deadline", "poison_events",
+                    "poison_retries", "poison_failures", "slot_purges",
+                    "steps")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
+        self.registry = registry or MetricsRegistry()
+        for k in self.COUNTER_KEYS:
+            self.registry.counter(k)
+        self.registry.gauge("queue_depth")
+        self.registry.gauge("peak_queue_depth")
+        self.registry.gauge("rank_level")
+        self._ttft = self.registry.histogram("ttft_ms")
+        self._queue_wait = self.registry.histogram("queue_wait_ms")
+        self._step = self.registry.histogram("step_ms")
         self.rank_residency: Dict[int, int] = {}   # level -> steps spent
 
     def bump(self, key: str, n: int = 1) -> None:
-        self.counters[key] = self.counters.get(key, 0) + n
+        self.registry.counter(key).inc(n)
+
+    def count(self, key: str) -> int:
+        return self.registry.counter(key).value
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """Legacy read surface (pre-v2 callers indexed a plain dict)."""
+        out = {k: c.value for k, c in self.registry.counters.items()}
+        out["peak_queue_depth"] = int(
+            self.registry.gauges["peak_queue_depth"].value)
+        return out
 
     def observe_queue_depth(self, depth: int) -> None:
-        if depth > self.counters["peak_queue_depth"]:
-            self.counters["peak_queue_depth"] = depth
+        self.registry.gauge("queue_depth").set(depth)
+        self.registry.gauge("peak_queue_depth").set_max(depth)
+
+    def observe_ttft(self, seconds: float) -> None:
+        self._ttft.observe(seconds * 1e3)
+
+    def observe_queue_wait(self, seconds: float) -> None:
+        self._queue_wait.observe(seconds * 1e3)
+
+    def observe_step_ms(self, ms: float) -> None:
+        self._step.observe(ms)
 
     def step_at_level(self, level: int) -> None:
-        self.counters["steps"] += 1
+        self.registry.counter("steps").inc()
+        self.registry.gauge("rank_level").set(level)
         self.rank_residency[level] = self.rank_residency.get(level, 0) + 1
 
     @staticmethod
-    def _pcts(samples: List[float]) -> Dict[str, float]:
-        if not samples:
-            return {"p50_ms": 0.0, "p95_ms": 0.0, "mean_ms": 0.0, "n": 0}
-        a = np.asarray(samples) * 1e3
-        return {"p50_ms": round(float(np.percentile(a, 50)), 3),
-                "p95_ms": round(float(np.percentile(a, 95)), 3),
-                "mean_ms": round(float(a.mean()), 3), "n": len(a)}
+    def _pcts(hist: Histogram) -> Dict[str, float]:
+        """Legacy ``{p50_ms, p95_ms, mean_ms, n}`` block from a
+        millisecond reservoir. Exact on 0 samples (all-zero with
+        ``n == 0``, so "no data" is distinguishable from a measured
+        0 ms) and on 1 sample (that sample at every percentile)."""
+        s = hist.summary()
+        return {"p50_ms": s["p50"], "p95_ms": s["p95"],
+                "mean_ms": s["mean"], "n": s["n"]}
 
     def snapshot(self, queue_depth: int, rank_level: int,
                  engine_stats: Optional[Dict[str, int]] = None) -> Dict:
-        """The serve-metrics dict: everything an operator would watch.
-        ``engine_stats`` folds in the batcher's jit-retrace counters."""
-        out: Dict = dict(self.counters)
+        """The serve-metrics snapshot: everything an operator would
+        watch, as the versioned ``repro.serve.metrics/v2`` schema
+        (``schema`` / ``counters`` / ``gauges`` / ``histograms`` /
+        ``rank_residency``). ``engine_stats`` folds the batcher's
+        jit-retrace and AOT counters into the same ``counters`` block —
+        one surface for all three historical stats shapes.
+
+        Every pre-v2 top-level key (``submitted``, ``ttft`` with
+        ``*_ms`` percentiles, ``engine``, ...) is still present as a
+        **deprecated alias** for one release; consumers should move to
+        the typed blocks."""
+        self.registry.gauge("queue_depth").set(queue_depth)
+        self.registry.gauge("rank_level").set(rank_level)
+        residency = {str(k): v for k, v in
+                     sorted(self.rank_residency.items())}
+        out = self.registry.snapshot(
+            extra={"rank_residency": residency})
+        if engine_stats:
+            out["counters"].update(engine_stats)
+        # ---- deprecated legacy aliases (one release) ----------------------
+        out.update(self.counters)
         out["queue_depth"] = queue_depth
         out["rank_level"] = rank_level
-        out["rank_residency"] = {str(k): v for k, v in
-                                 sorted(self.rank_residency.items())}
-        out["ttft"] = self._pcts(self.ttft_s)
-        out["queue_wait"] = self._pcts(self.queue_wait_s)
+        out["ttft"] = self._pcts(self._ttft)
+        out["queue_wait"] = self._pcts(self._queue_wait)
         if engine_stats:
             out["engine"] = dict(engine_stats)
         return out
@@ -174,7 +231,7 @@ class AdmissionController:
             elif len(admitted) < n:
                 req.status = RUNNING
                 req.t_admit = now
-                self.metrics.queue_wait_s.append(now - req.t_submit)
+                self.metrics.observe_queue_wait(now - req.t_submit)
                 admitted.append(req)
             else:
                 keep.append(req)

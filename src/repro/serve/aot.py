@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.obs import trace
 
 # Roles an engine dispatches through the registry. One compiled
 # executable exists per (role, variant): decode has one variant per
@@ -330,13 +331,17 @@ class AotRegistry:
         fn, donate = self._role_fn(role)
         key = cache_key(self.fingerprint, role, variant, _sig_of(args),
                         self.scfg, self.cfg)
-        exe = self.cache.load(key)
+        with trace.span("aot_deserialize", role=role,
+                        variant=list(variant)):
+            exe = self.cache.load(key)
         if exe is False:
             self.stats["aot_deser_failures"] += 1
             exe = None
         if exe is None:
-            compiled = jax.jit(fn, donate_argnums=donate
-                               ).lower(*args).compile()
+            with trace.span("aot_compile", role=role,
+                            variant=list(variant)):
+                compiled = jax.jit(fn, donate_argnums=donate
+                                   ).lower(*args).compile()
             self.stats["aot_compiles"] += 1
             self.cache.store(key, compiled)
             exe = compiled
@@ -419,25 +424,29 @@ class AotRegistry:
         After this returns, steady-state serving performs zero XLA
         compiles (``aot_compiles`` stays flat) no matter which bucket,
         rung or helper a request exercises."""
-        B = self.scfg.batch
-        i32 = jnp.int32
-        cache_aval = self._cache_aval()
-        tok_aval = jax.ShapeDtypeStruct((B, 1), i32)
-        for level, params in enumerate(ladder):
-            self._ensure(ROLE_DECODE, (level,),
-                         (params, cache_aval, tok_aval))
-        if bucketed:
-            src_aval = None
-            for sb in self.prefill_buckets():
-                batch_aval = {"tokens": jax.ShapeDtypeStruct((B, sb), i32),
-                              "lengths": jax.ShapeDtypeStruct((B,), i32)}
-                self._ensure(ROLE_PREFILL, (0, sb), (ladder[0], batch_aval))
-                if src_aval is None:
-                    fn, _ = self._role_fn(ROLE_PREFILL)
-                    _, src_aval = jax.eval_shape(fn, ladder[0], batch_aval)
-            slots_aval = jax.ShapeDtypeStruct((B,), i32)
-            if src_aval is not None:
-                self._ensure(ROLE_SCATTER, (B,),
-                             (cache_aval, src_aval, slots_aval))
-        self._ensure(ROLE_PURGE, (),
-                     (cache_aval, jax.ShapeDtypeStruct((B,), i32)))
+        with trace.span("aot_warm", rungs=len(ladder), bucketed=bucketed):
+            B = self.scfg.batch
+            i32 = jnp.int32
+            cache_aval = self._cache_aval()
+            tok_aval = jax.ShapeDtypeStruct((B, 1), i32)
+            for level, params in enumerate(ladder):
+                self._ensure(ROLE_DECODE, (level,),
+                             (params, cache_aval, tok_aval))
+            if bucketed:
+                src_aval = None
+                for sb in self.prefill_buckets():
+                    batch_aval = {
+                        "tokens": jax.ShapeDtypeStruct((B, sb), i32),
+                        "lengths": jax.ShapeDtypeStruct((B,), i32)}
+                    self._ensure(ROLE_PREFILL, (0, sb),
+                                 (ladder[0], batch_aval))
+                    if src_aval is None:
+                        fn, _ = self._role_fn(ROLE_PREFILL)
+                        _, src_aval = jax.eval_shape(fn, ladder[0],
+                                                     batch_aval)
+                slots_aval = jax.ShapeDtypeStruct((B,), i32)
+                if src_aval is not None:
+                    self._ensure(ROLE_SCATTER, (B,),
+                                 (cache_aval, src_aval, slots_aval))
+            self._ensure(ROLE_PURGE, (),
+                         (cache_aval, jax.ShapeDtypeStruct((B,), i32)))

@@ -30,6 +30,9 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import flightrec as frec
+from repro.obs import trace
+from repro.obs.metrics import MetricsExporter, MetricsServer
 from repro.serve import admission as adm
 from repro.serve import aot as aotlib
 from repro.serve.aot import AotCache, AotRegistry, TracedRegistry
@@ -108,11 +111,18 @@ class ServeOptions:
     heartbeat_dir: str = ""
     fault_plan: str = ""
     stats_json: str = ""
-    # --- front door (this PR) ---------------------------------------------
+    # --- front door -------------------------------------------------------
     aot: bool = False               # AOT-compiled executables + disk cache
     aot_cache_dir: str = ""         # "" = $REPRO_AOT_CACHE or ~/.cache
     replicas: int = 1               # N engines behind one Router
     stream: bool = False            # drive through FrontDoor even for N=1
+    # --- observability (DESIGN.md §6) -------------------------------------
+    trace_out: str = ""             # Chrome-trace JSON path (Perfetto)
+    device_trace_dir: str = ""      # jax.profiler logdir (device timeline)
+    metrics_json: str = ""          # periodic v2 metrics snapshot JSON
+    metrics_interval_s: float = 1.0  # exporter cadence for metrics_json
+    metrics_port: int = -1          # Prometheus /metrics; -1 off, 0 ephemeral
+    flightrec_dir: str = ""         # flight-recorder dump directory
 
     def __post_init__(self):
         from repro.core.compress import METHODS
@@ -145,6 +155,11 @@ class ServeOptions:
             raise ValueError("batch and max_len must be >= 1")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if not -1 <= self.metrics_port <= 65535:
+            raise ValueError("metrics_port must be -1 (off), 0 "
+                             "(ephemeral) or a valid TCP port")
+        if self.metrics_interval_s <= 0:
+            raise ValueError("metrics_interval_s must be > 0")
 
     def serve_config(self) -> ServeConfig:
         return ServeConfig(batch=self.batch, max_len=self.max_len)
@@ -175,8 +190,9 @@ def _resilience_kwargs(opts: ServeOptions, replica: int = 0,
         heartbeat = Heartbeat(os.path.join(opts.heartbeat_dir,
                                            f"worker{replica}.json"),
                               fault=faults)
+    flight = frec.FlightRecorder(dump_dir=opts.flightrec_dir or None)
     return dict(admission=opts.admission_config(), faults=faults,
-                heartbeat=heartbeat)
+                heartbeat=heartbeat, flight=flight)
 
 
 def _compress_in_process(opts: ServeOptions, params, cfg, echo=None):
@@ -333,7 +349,28 @@ def serve(opts: ServeOptions, *,
     (``run_until_drained``, byte-identical to the historical CLI path);
     ``replicas > 1`` or ``stream=True`` goes through the front door — N
     engines behind a :class:`Router` that places each request on the
-    least-loaded replica and spills on backpressure."""
+    least-loaded replica and spills on backpressure.
+
+    Observability (DESIGN.md §6): ``trace_out`` records the whole run as
+    Chrome-trace JSON (load it in https://ui.perfetto.dev);
+    ``device_trace_dir`` adds a ``jax.profiler`` device capture;
+    ``metrics_json``/``metrics_port`` export the live v2 metrics
+    snapshot as periodic JSON / a Prometheus scrape endpoint;
+    ``flightrec_dir`` arms per-engine flight-recorder dumps."""
+    if opts.trace_out or opts.device_trace_dir:
+        with trace.tracing(out=opts.trace_out or None):
+            with trace.device_trace(opts.device_trace_dir or None):
+                result = _serve_inner(opts, echo=echo)
+        if opts.trace_out:
+            _echo(echo, f"trace written to {opts.trace_out} "
+                        f"(load in https://ui.perfetto.dev)")
+        return result
+    return _serve_inner(opts, echo=echo)
+
+
+def _serve_inner(opts: ServeOptions, *,
+                 echo: Optional[Callable[[str], None]] = None
+                 ) -> DrainResult:
     from repro.configs import get_config
 
     cfg = get_config(opts.arch)
@@ -343,29 +380,51 @@ def serve(opts: ServeOptions, *,
                for i in range(opts.replicas)]
     reqs = _workload(opts, cfg.vocab_size)
 
-    if opts.replicas > 1 or opts.stream:
-        router = Router([FrontDoor(e) for e in engines]).start()
-        accepted = 0
-        for r in reqs:
-            st = router.submit(r.tokens, r.n_new,
-                               deadline_s=opts.deadline_s, rid=r.rid)
-            accepted += st is not None
-        result = router.drain_all(timeout=opts.watchdog_s)
-        router.close()
-        stats = [e.stats for e in engines]
-        metrics = [d.metrics() for d in router.doors]
-    else:
-        cb = engines[0]
-        accepted = 0
-        for r in reqs:
-            accepted += cb.submit(r)
-        result = cb.run_until_drained(watchdog_s=opts.watchdog_s)
-        stats = cb.stats
-        metrics = cb.metrics()
+    multi = opts.replicas > 1 or opts.stream
+    exporter = server = None
+    if opts.metrics_json:
+        supplier = ((lambda: [e.metrics() for e in engines]) if multi
+                    else engines[0].metrics)
+        exporter = MetricsExporter(opts.metrics_json, supplier,
+                                   interval_s=opts.metrics_interval_s
+                                   ).start()
+    if opts.metrics_port >= 0:
+        server = MetricsServer(lambda: [e.metrics() for e in engines],
+                               port=opts.metrics_port).start()
+        _echo(echo, f"metrics: http://127.0.0.1:{server.port}/metrics")
+    try:
+        if multi:
+            router = Router([FrontDoor(e) for e in engines]).start()
+            accepted = 0
+            for r in reqs:
+                st = router.submit(r.tokens, r.n_new,
+                                   deadline_s=opts.deadline_s, rid=r.rid)
+                accepted += st is not None
+            result = router.drain_all(timeout=opts.watchdog_s)
+            router.close()
+            stats = [e.stats for e in engines]
+            metrics = [d.metrics() for d in router.doors]
+        else:
+            cb = engines[0]
+            accepted = 0
+            for r in reqs:
+                accepted += cb.submit(r)
+            result = cb.run_until_drained(watchdog_s=opts.watchdog_s)
+            stats = cb.stats
+            metrics = cb.metrics()
+    finally:
+        if exporter is not None:
+            exporter.stop()
+            _echo(echo, f"metrics snapshot written to {opts.metrics_json}")
+        if server is not None:
+            server.stop()
     if accepted < opts.requests:
         _echo(echo, f"backpressure: {opts.requests - accepted}/"
                     f"{opts.requests} requests rejected at submit "
                     f"(max_queue={opts.max_queue})")
+    dumped = [p for e in engines for p in e.flight.dumps]
+    if dumped:
+        _echo(echo, "flight-recorder artifacts: " + ", ".join(dumped))
     dt = time.perf_counter() - t0
     result.report = _report(result, stats, accepted, opts.requests, dt)
     if opts.stats_json:

@@ -36,10 +36,16 @@ default construction behaves exactly like the pre-resilience engine):
   seed-deterministic NaN/latency/heartbeat faults through the exact same
   code paths production faults would take (chaos suite:
   tests/test_resilience.py).
+* **observability** — every stage is traced (``obs.trace`` spans:
+  admit/prefill/decode_step/purge/poison_probe, per-request async spans,
+  queue-depth and rung counter tracks) and a flight recorder
+  (``obs.flightrec``) rings recent events, auto-dumping an artifact on a
+  typed request failure or a non-``drained`` drain (DESIGN.md §6).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 import warnings
 from dataclasses import dataclass
@@ -52,6 +58,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import transformer as T
 from repro.models.params import Params
+from repro.obs import flightrec as frec
+from repro.obs import trace
 from repro.serve import admission as adm
 from repro.serve import aot as aotlib
 
@@ -318,12 +326,15 @@ class ContinuousBatcher:
 
     def __init__(self, params: Params, cfg: ModelConfig, scfg: ServeConfig,
                  admission: Optional[adm.AdmissionConfig] = None,
-                 faults=None, heartbeat=None, executables=None):
+                 faults=None, heartbeat=None, executables=None,
+                 flight: Optional[frec.FlightRecorder] = None):
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.plan = None
         self.acfg = admission or adm.AdmissionConfig()
         self.faults = faults          # dist.faultinject.FaultPlan or None
         self.heartbeat = heartbeat    # dist.ft.Heartbeat or None
+        # always-on event ring; only writes when flight.dump_dir is set
+        self.flight = flight if flight is not None else frec.FlightRecorder()
         self.cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.slots: List[Optional[Request]] = [None] * scfg.batch
         self.tokens = jnp.zeros((scfg.batch, 1), dtype=jnp.int32)
@@ -382,6 +393,7 @@ class ContinuousBatcher:
             self.on_token(req, tok)
 
     def _emit_terminal(self, req: Request) -> None:
+        trace.async_end("request", req.rid, status=req.status)
         if self.on_terminal is not None:
             self.on_terminal(req)
 
@@ -398,38 +410,55 @@ class ContinuousBatcher:
         """Offer a request. Returns True iff admitted to the wait queue;
         False means backpressure (queue at ``max_queue`` — the request is
         marked ``shed_queue_full`` and kept in ``admission.rejected``)."""
-        return self.admission.offer(req, time.perf_counter())
+        trace.async_begin("request", req.rid, n_new=req.n_new,
+                          prompt_len=len(req.tokens))
+        ok = self.admission.offer(req, time.perf_counter())
+        if not ok:
+            trace.async_end("request", req.rid, status=req.status)
+            self.flight.note("reject", rid=req.rid, status=req.status)
+        return ok
 
     def _params_now(self) -> Params:
         return self.ladder[self.level]
 
     def _adjust_rank_level(self) -> None:
         depth = len(self.queue)
+        prev = self.level
         if (depth >= self.acfg.degrade_above
                 and self.level < len(self.ladder) - 1):
             self.level += 1
         elif depth <= self.acfg.restore_below and self.level > 0:
             self.level -= 1
+        if self.level != prev:
+            trace.instant("rung_transition", frm=prev, to=self.level,
+                          queue_depth=depth)
+            self.flight.note("rung", frm=prev, to=self.level,
+                             queue_depth=depth, step=self._step_idx)
 
     # ---- admission -------------------------------------------------------
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
         admit, shed = self.admission.take(len(free), time.perf_counter())
         for req in shed:
+            self.flight.note("shed", rid=req.rid, status=req.status)
             self._emit_terminal(req)
         if not admit:
             return
-        for req in admit:
-            # cache rows hold prompt + generated tokens: an over-long
-            # prompt keeps its newest max_len-1 tokens (degrade, not crash)
-            keep = self.scfg.max_len - 1
-            if len(req.tokens) > keep:
-                req.tokens = req.tokens[-keep:]
-        if self.bucketed:
-            self._admit_batched(admit, free[:len(admit)])
-        else:
-            for req, slot in zip(admit, free):
-                self._admit_exact(req, slot)
+        with trace.span("admit", n=len(admit), level=self.level):
+            self.flight.note("admit", rids=[r.rid for r in admit],
+                             level=self.level)
+            for req in admit:
+                # cache rows hold prompt + generated tokens: an over-long
+                # prompt keeps its newest max_len-1 tokens (degrade, not
+                # crash)
+                keep = self.scfg.max_len - 1
+                if len(req.tokens) > keep:
+                    req.tokens = req.tokens[-keep:]
+            if self.bucketed:
+                self._admit_batched(admit, free[:len(admit)])
+            else:
+                for req, slot in zip(admit, free):
+                    self._admit_exact(req, slot)
         self.stats["admissions"] += 1
         self.stats["admitted"] += len(admit)
 
@@ -456,11 +485,14 @@ class ContinuousBatcher:
             toks[j, :len(req.tokens)] = req.tokens
             lens[j] = len(req.tokens)
             slots[j] = slot
-        logits, c1 = self.exec.prefill(
-            self._params_now(), {"tokens": jnp.asarray(toks),
-                                 "lengths": jnp.asarray(lens)},
-            level=self.level, bucket=Sb)
-        self.cache = self.exec.scatter(self.cache, c1, jnp.asarray(slots))
+        with trace.span("prefill", bucket=Sb, n=len(admit),
+                        level=self.level):
+            logits, c1 = self.exec.prefill(
+                self._params_now(), {"tokens": jnp.asarray(toks),
+                                     "lengths": jnp.asarray(lens)},
+                level=self.level, bucket=Sb)
+            self.cache = self.exec.scatter(self.cache, c1,
+                                           jnp.asarray(slots))
         last = np.array(logits[:, -1])                 # (B, V) writable host copy
         if self.faults is not None:
             for j in self.faults.prefill_rows_to_poison(
@@ -479,7 +511,7 @@ class ContinuousBatcher:
                 req.out.append(int(tok[j]))
                 self._emit_token(req, int(tok[j]))
                 req.t_first = req.t_first or now
-                self._metrics.ttft_s.append(now - req.t_submit)
+                self._metrics.observe_ttft(now - req.t_submit)
                 self.slots[slot] = req
                 self._progress += 1
             else:
@@ -491,11 +523,14 @@ class ContinuousBatcher:
 
     def _admit_exact(self, req: Request, slot: int) -> None:
         """Exact-length single-row admission (recurrent-state archs)."""
-        logits, c1 = self.exec.prefill(
-            self._params_now(), {"tokens": jnp.asarray(req.tokens[None, :])},
-            level=self.level)
-        self.cache = self.exec.scatter(self.cache, c1,
-                                       jnp.asarray([slot], dtype=np.int32))
+        with trace.span("prefill", exact=len(req.tokens),
+                        level=self.level):
+            logits, c1 = self.exec.prefill(
+                self._params_now(),
+                {"tokens": jnp.asarray(req.tokens[None, :])},
+                level=self.level)
+            self.cache = self.exec.scatter(
+                self.cache, c1, jnp.asarray([slot], dtype=np.int32))
         last = np.array(logits[:, -1])
         self._poison_rid_rows([req], last)
         if not np.isfinite(last[0]).all():
@@ -507,7 +542,7 @@ class ContinuousBatcher:
         self._emit_token(req, t)
         now = time.perf_counter()
         req.t_first = req.t_first or now
-        self._metrics.ttft_s.append(now - req.t_submit)
+        self._metrics.observe_ttft(now - req.t_submit)
         self.tokens = self.tokens.at[slot, 0].set(t)
         self.slots[slot] = req
         self._progress += 1
@@ -515,12 +550,13 @@ class ContinuousBatcher:
     # ---- poison quarantine -----------------------------------------------
     def _purge_slots(self, rows: List[int]) -> None:
         """Zero the cache rows + next-token entries of quarantined slots."""
-        B = self.scfg.batch
-        pad = np.full((B,), B, dtype=np.int32)
-        pad[:len(rows)] = rows
-        jrows = jnp.asarray(pad)
-        self.cache = self.exec.purge(self.cache, jrows)
-        self.tokens = self.tokens.at[jrows, 0].set(0, mode="drop")
+        with trace.span("purge", rows=list(rows)):
+            B = self.scfg.batch
+            pad = np.full((B,), B, dtype=np.int32)
+            pad[:len(rows)] = rows
+            jrows = jnp.asarray(pad)
+            self.cache = self.exec.purge(self.cache, jrows)
+            self.tokens = self.tokens.at[jrows, 0].set(0, mode="drop")
         self._metrics.bump("slot_purges", len(rows))
 
     def _probe(self, reqs: List[Request]) -> np.ndarray:
@@ -529,6 +565,7 @@ class ContinuousBatcher:
         finiteness. Reuses the admission prefill executables, so probing
         adds no new traces."""
         self._metrics.bump("poison_probes")
+        trace.instant("poison_probe", rids=[r.rid for r in reqs])
         seqs = []
         keep = self.scfg.max_len - 1
         for r in reqs:
@@ -588,6 +625,9 @@ class ContinuousBatcher:
         persistently faulty engine still terminates typed instead of
         looping forever)."""
         self._metrics.bump("poison_events")
+        self.flight.note("poison", rids=[r.rid for r in reqs],
+                         ambiguous=ambiguous, level=self.level,
+                         step=self._step_idx)
         offenders, collateral = (self._bisect_poison(reqs) if ambiguous
                                  else (list(reqs), []))
         if not offenders:       # transient: no culprit to exonerate against
@@ -611,6 +651,10 @@ class ContinuousBatcher:
                 self.failed.append(req)
                 self._metrics.bump("poison_failures")
                 self._progress += 1          # terminal transition
+                self.flight.note("fail", rid=req.rid, level=self.level,
+                                 retries=req.retries, error=req.error)
+                self.dump_flight("failed_poison",
+                                 {"rid": req.rid, "error": req.error})
                 self._emit_terminal(req)
             else:
                 req.out = []
@@ -623,6 +667,15 @@ class ContinuousBatcher:
         """One engine iteration: beat liveness, shed overdue work, admit,
         one decode step for all live slots through the finite guard.
         Returns the number of healthy live slots stepped."""
+        t0 = time.perf_counter()
+        with trace.span("engine_step", step=self._step_idx):
+            n = self._step_inner()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self._metrics.observe_step_ms(wall_ms)
+        self.flight.step_timing(self._step_idx - 1, wall_ms, n)
+        return n
+
+    def _step_inner(self) -> int:
         idx = self._step_idx
         self._step_idx += 1
         if self.heartbeat is not None:
@@ -636,12 +689,17 @@ class ContinuousBatcher:
         self._adjust_rank_level()
         self._metrics.step_at_level(self.level)
         self._metrics.observe_queue_depth(len(self.queue))
+        trace.counter("serve", queue_depth=len(self.queue),
+                      rank_level=self.level)
         self._admit()
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return 0
-        logits, self.cache = self.exec.decode(
-            self._params_now(), self.cache, self.tokens, level=self.level)
+        with trace.span("decode_step", step=idx, live=len(live),
+                        level=self.level):
+            logits, self.cache = self.exec.decode(
+                self._params_now(), self.cache, self.tokens,
+                level=self.level)
         last = np.array(logits[:, -1])                 # (B, V) writable host copy
         if self.faults is not None:
             for row in self.faults.decode_rows_to_poison(idx, live):
@@ -690,11 +748,11 @@ class ContinuousBatcher:
             if not self.queue and all(s is None for s in self.slots):
                 break
             before = (self._progress
-                      + self._metrics.counters["shed_deadline"])
+                      + self._metrics.count("shed_deadline"))
             self.step()
             now = time.perf_counter()
             if (self._progress
-                    + self._metrics.counters["shed_deadline"]) > before:
+                    + self._metrics.count("shed_deadline")) > before:
                 last_progress = now
             elif (watchdog_s is not None
                     and now - last_progress > watchdog_s):
@@ -706,6 +764,9 @@ class ContinuousBatcher:
                      + list(self.queue))
         if status == "timeout" and not undrained:
             status = "drained"     # last permitted step finished the work
+        if status != "drained":
+            self.dump_flight(status,
+                             {"undrained_rids": [r.rid for r in undrained]})
         return DrainResult(self.done, status, undrained,
                            shed=list(self.admission.shed),
                            rejected=list(self.admission.rejected),
@@ -713,10 +774,35 @@ class ContinuousBatcher:
 
     # ---- observability ---------------------------------------------------
     def metrics(self) -> Dict:
-        """The structured serve-metrics dict (queue depth, shed counts,
-        retries, rank-bucket residency, TTFT/queue-wait percentiles, jit
-        retrace counters) — the one surface shared by operators
+        """The structured serve-metrics snapshot (v2 schema + deprecated
+        legacy aliases: queue depth, shed counts, retries, rank-bucket
+        residency, TTFT/queue-wait percentiles, jit retrace + AOT
+        counters) — the one surface shared by operators
         (``serve.py --stats-json``), the degradation benchmark and the
         chaos tests."""
         return self._metrics.snapshot(len(self.queue), self.level,
                                       engine_stats=self.stats)
+
+    def dump_flight(self, reason: str,
+                    extra: Optional[Dict] = None) -> Optional[str]:
+        """Dump the flight-recorder ring with full engine context (armed
+        ``FaultPlan`` incl. seed, queue/slot state, elastic rung, step
+        index). Returns the artifact path, or ``None`` when no dump dir
+        is configured. Called automatically on a typed poison failure and
+        a non-``drained`` drain; the front door calls it on its own
+        triggers too."""
+        ctx: Dict = {
+            "step": self._step_idx,
+            "rank_level": self.level,
+            "ladder_len": len(self.ladder),
+            "queue_depth": len(self.queue),
+            "queued_rids": [r.rid for r in self.queue],
+            "slot_rids": [r.rid if r is not None else None
+                          for r in self.slots],
+            "failed_rids": [r.rid for r in self.failed],
+            "fault_plan": (json.loads(self.faults.to_json())
+                           if self.faults is not None else None),
+        }
+        if extra:
+            ctx.update(extra)
+        return self.flight.dump(reason, ctx)

@@ -140,7 +140,9 @@ class FrontDoor:
     def start(self) -> "FrontDoor":
         if self._thread is None:
             self._stop.clear()
-            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread = threading.Thread(target=self._loop,
+                                            name="serve-engine",
+                                            daemon=True)
             self._thread.start()
         return self
 
@@ -218,6 +220,10 @@ class FrontDoor:
                      + list(cb.queue) + list(self._intake.queue))
         if status == "timeout" and not undrained:
             status = "drained"
+        if status != "drained":
+            cb.dump_flight(status, {"intake_depth": self._intake.qsize(),
+                                    "undrained_rids": [r.rid
+                                                       for r in undrained]})
         return DrainResult(cb.done, status, undrained,
                            shed=list(cb.admission.shed),
                            rejected=list(cb.admission.rejected),

@@ -83,6 +83,13 @@ GOLDEN = [
     (["--aot-cache-dir", "/tmp/aot"], "aot_cache_dir", "/tmp/aot"),
     (["--replicas", "2"], "replicas", 2),
     (["--stream"], "stream", True),
+    (["--trace-out", "runs/t.json"], "trace_out", "runs/t.json"),
+    (["--device-trace-dir", "runs/prof"], "device_trace_dir",
+     "runs/prof"),
+    (["--metrics-json", "runs/m.json"], "metrics_json", "runs/m.json"),
+    (["--metrics-interval-s", "0.5"], "metrics_interval_s", 0.5),
+    (["--metrics-port", "0"], "metrics_port", 0),
+    (["--flightrec-dir", "runs/frec"], "flightrec_dir", "runs/frec"),
 ]
 # flags that exist but map through translation, or cannot combine with
 # the all-at-once argv below
@@ -167,6 +174,10 @@ def test_options_validate_at_construction():
                          calib_samples=12)
     with pytest.raises(ValueError, match="replicas"):
         api.ServeOptions(arch="llama-mini", replicas=0)
+    with pytest.raises(ValueError, match="metrics_port"):
+        api.ServeOptions(arch="llama-mini", metrics_port=70000)
+    with pytest.raises(ValueError, match="metrics_interval_s"):
+        api.ServeOptions(arch="llama-mini", metrics_interval_s=0.0)
     with pytest.raises(dataclasses.FrozenInstanceError):
         ok.batch = 9
 
