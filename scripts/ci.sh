@@ -103,6 +103,9 @@ python -m benchmarks.serve_degrade --smoke --force
 echo "== boot-TTFT benchmark smoke (AOT front door) =="
 python -m benchmarks.boot_ttft --smoke --force
 
+echo "== paged-KV benchmark smoke (block-table pool + prefix reuse) =="
+python -m benchmarks.serve_paged --smoke --force
+
 echo "== BENCH json schemas =="
 python - <<'EOF'
 import json
@@ -199,6 +202,24 @@ if os.environ.get("BENCH_GATE", "on") != "off":
 print(f"ok: BENCH_boot.json {len(rows)} rows, warm-AOT "
       f"{warm['ttft_s']}s to first token "
       f"({warm.get('speedup_vs_traced', float('nan'))}x vs traced)")
+
+rows = json.load(open("BENCH_serve_paged.json"))
+assert rows, "no paged-KV benchmark rows"
+for r in rows:
+    assert {"bench", "config", "tokens_per_s", "ms_per_step",
+            "peak_kv_mib"} <= set(r), r
+cells = {r["config"]["mode"]: r for r in rows}
+assert set(cells) == {"contiguous", "paged", "paged+prefix"}, sorted(cells)
+# the memory claim, not a perf claim: the paged pool's peak block
+# footprint stays below the contiguous pool's full allocation
+contig = cells["contiguous"]["peak_kv_mib"]
+for mode in ("paged", "paged+prefix"):
+    assert cells[mode]["peak_kv_mib"] < contig, (mode, cells[mode], contig)
+# prefix reuse must actually fire on the shared-header group
+assert cells["paged+prefix"]["prefix_hits"] > 0, cells["paged+prefix"]
+print(f"ok: BENCH_serve_paged.json {len(rows)} rows, peak KV "
+      f"{contig:.2f} -> {cells['paged']['peak_kv_mib']:.2f} MiB, "
+      f"prefix_hits={cells['paged+prefix']['prefix_hits']}")
 EOF
 
 # Baselines carry a per-machine _calibration row (scripts/bench_gate.py
@@ -240,6 +261,8 @@ if [ "${BENCH_GATE:-on}" != "off" ]; then
     benchmarks/baselines/BENCH_boot.smoke.json \
     --metric boots_per_s \
     --threshold "$(python -c "print(min(0.9, 2*float('$THRESH')))")"
+  python scripts/bench_gate.py BENCH_serve_paged.json \
+    benchmarks/baselines/BENCH_serve_paged.smoke.json --threshold "$THRESH"
 else
   echo "== bench regression gate skipped (BENCH_GATE=off) =="
 fi

@@ -42,7 +42,7 @@ def _kernel(nkv: int, bk: int, scale: float, window: int, softcap: float,
             len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
     b = pl.program_id(0)
     ki = pl.program_id(2)
-    ln = len_ref[b]                                    # pos + 1, >= 1
+    ln = len_ref[b]                                    # pos + 1; 0 = dead slot
 
     @pl.when(ki == 0)
     def _init():
@@ -51,9 +51,12 @@ def _kernel(nkv: int, bk: int, scale: float, window: int, softcap: float,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     if window:
-        bound = nkv                    # ring: every block may hold live slots
+        # ring: every block may hold live slots — except a dead slot
+        # (ln == 0, e.g. freshly purged), which must emit exact zeros
+        # rather than softmax over an all-masked row
+        bound = jnp.where(ln > 0, nkv, 0)
     else:
-        bound = (ln + bk - 1) // bk    # full cache: live prefix only
+        bound = (ln + bk - 1) // bk    # full cache: live prefix only (0 dead)
 
     @pl.when(ki < bound)
     def _step():
@@ -94,8 +97,9 @@ def decode_attention_bkgh(q: jax.Array, k: jax.Array, v: jax.Array,
                           interpret: bool = False) -> jax.Array:
     """q: (B, KV, G, hd) one token per sequence; k/v: (B, L, KV, hd) cache
     pool (L a multiple of bk — the ops wrapper pads); lengths: (B,) int32 =
-    pos + 1 per slot. window > 0 selects the ring-buffer layout (real ring
-    size = window; L may carry alignment padding past it).
+    pos + 1 per slot (0 marks a dead/purged slot, whose output row is exact
+    zeros). window > 0 selects the ring-buffer layout (real ring size =
+    window; L may carry alignment padding past it).
     Returns (B, KV, G, hd)."""
     B, KV, G, hd = q.shape
     L = k.shape[1]
@@ -107,8 +111,10 @@ def decode_attention_bkgh(q: jax.Array, k: jax.Array, v: jax.Array,
     def kv_index(b, h, ki, len_ref):
         if window:
             return (b, ki, h, 0)
+        # clamp to the live prefix; the outer max guards length-0 slots
+        # (freshly purged), whose nb - 1 would otherwise address block -1
         nb = (len_ref[b] + bk - 1) // bk
-        return (b, jnp.minimum(ki, nb - 1), h, 0)
+        return (b, jnp.maximum(jnp.minimum(ki, nb - 1), 0), h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -134,3 +140,108 @@ def decode_attention_bkgh(q: jax.Array, k: jax.Array, v: jax.Array,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(lengths, q, k, v)
+
+
+def _paged_kernel(nb: int, bk: int, scale: float, softcap: float,
+                  len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref):
+    """Same online-softmax recurrence as ``_kernel``'s full-cache path; the
+    kv tile for logical block ki arrives via the block-table indirection in
+    the index map, so the math here is bit-identical to the contiguous
+    kernel given the same token values."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    ln = len_ref[b]                                    # pos + 1; 0 = dead slot
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bound = (ln + bk - 1) // bk        # live logical blocks (0 for dead slots)
+
+    @pl.when(ki < bound)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        G = s.shape[0]
+        slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        valid = slot < ln
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_paged_bkgh(q: jax.Array, k: jax.Array, v: jax.Array,
+                                lengths: jax.Array, table: jax.Array, *,
+                                softcap: float = 0.0,
+                                interpret: bool = False) -> jax.Array:
+    """Block-table paged variant of :func:`decode_attention_bkgh` (full
+    cache layout only — ring/window stays contiguous).
+
+    q: (B, KV, G, hd); k/v: (P, bk, KV, hd) — one flat arena of P physical
+    blocks shared by every slot, block 0 reserved as the never-written null
+    block; lengths: (B,) int32 = pos + 1 (0 = dead slot, exact-zero output);
+    table: (B, NB) int32 — logical block j of slot b lives in physical
+    block table[b, j].
+
+    Both the lengths AND the table ride as scalar-prefetch operands, so the
+    kv index map resolves the indirection before the body runs: grid step
+    ki of slot b DMAs arena block table[b, clamp(ki)]. Steps past the live
+    prefix re-address the previous physical block — Pallas skips the DMA
+    for an unchanged index, exactly like the contiguous clamp — and their
+    compute is skipped with ``pl.when``. Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    P, bk = k.shape[0], k.shape[1]
+    NB = table.shape[1]
+    assert table.shape == (B, NB) and table.dtype == jnp.int32, table
+    assert lengths.shape == (B,) and lengths.dtype == jnp.int32
+    scale = hd ** -0.5
+
+    def kv_index(b, h, ki, len_ref, tbl_ref):
+        nb_live = (len_ref[b] + bk - 1) // bk
+        j = jnp.maximum(jnp.minimum(ki, nb_live - 1), 0)
+        return (tbl_ref[b, j], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, ki, len_ref, tbl_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, h, ki, len_ref, tbl_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max
+            pltpu.VMEM((G, 1), jnp.float32),     # denominator
+            pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, NB, bk, scale, softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(lengths, table, q, k, v)

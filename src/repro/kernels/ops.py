@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_bkgh
+from repro.kernels.decode_attention import (decode_attention_bkgh,
+                                            decode_attention_paged_bkgh)
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.gram import gram_blocked
 from repro.kernels.lowrank_matmul import lowrank_gemv, lowrank_matmul_2d
@@ -172,6 +173,27 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     o = decode_attention_bkgh(
         q.reshape(B, KV, G, hd), k, v, lengths.astype(jnp.int32),
         window=window, softcap=softcap, bk=bk, interpret=not _on_tpu())
+    return o.reshape(B, H, hd)
+
+
+def decode_attention_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                           lengths: jax.Array, table: jax.Array, *,
+                           softcap: float = 0.0) -> jax.Array:
+    """Paged-pool decode attention. q: (B, H, hd); k/v: (P, bk, KV, hd)
+    flat block arena (block 0 = reserved null block); lengths: (B,) live
+    length per slot (pos + 1; 0 = dead slot → exact-zero row); table:
+    (B, NB) int32 block table mapping logical block j of slot b to its
+    physical arena block. The block size is fixed by the arena layout
+    (serve.api validates it against the TPU sublane multiple), so unlike
+    the contiguous wrapper there is nothing to pad here. Returns
+    (B, H, hd). Inference-only, full-cache layout only."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    o = decode_attention_paged_bkgh(
+        q.reshape(B, KV, G, hd), k, v, lengths.astype(jnp.int32),
+        table.astype(jnp.int32), softcap=softcap,
+        interpret=not _on_tpu())
     return o.reshape(B, H, hd)
 
 

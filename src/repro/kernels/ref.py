@@ -51,8 +51,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     models/attention.attend_decode computes on the jnp path.
 
     q: (B, H, hd) one query per sequence; k/v: (B, L, KV, hd) cache pool;
-    lengths: (B,) int32 = pos + 1. window > 0 = ring-buffer layout (ring
-    size window; slots >= window are alignment padding).
+    lengths: (B,) int32 = pos + 1 (0 marks a dead/purged slot whose output
+    row is exact zeros — softmax over an all-masked row would otherwise
+    emit uniform junk). window > 0 = ring-buffer layout (ring size window;
+    slots >= window are alignment padding).
     Returns (B, H, hd)."""
     B, H, hd = q.shape
     L, KV = k.shape[1], k.shape[2]
@@ -72,6 +74,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None, None], out, 0.0)
     return out.reshape(B, H, hd).astype(q.dtype)
 
 

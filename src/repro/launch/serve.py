@@ -80,6 +80,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slots", type=int, default=None,
                     help=argparse.SUPPRESS)   # deprecated alias of --batch
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--kv-block", type=int, default=0,
+                    help="paged KV cache: block size in tokens (multiple "
+                         "of 8, divides --max-len); 0 = the contiguous "
+                         "per-slot pool (DESIGN.md §5.7)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="with --kv-block: requests sharing a prompt "
+                         "prefix refcount the same immutable KV blocks; "
+                         "admission prefills only the unshared tail "
+                         "(copy-on-write fork at the divergence block)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--n-new", type=int, default=32)
@@ -94,6 +103,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-retries", type=int, default=2,
                     help="poison-quarantine re-queue budget before a "
                          "request fails typed")
+    ap.add_argument("--reject-overlong", action="store_true",
+                    help="shed prompts longer than max_len - 1 with a "
+                         "typed shed_overlong status instead of "
+                         "truncating them to their newest tokens")
     ap.add_argument("--elastic", action="store_true",
                     help="serve-time elastic rank: degrade factorized "
                          "decode rank to pow2 buckets under queue "

@@ -385,8 +385,13 @@ def attend_decode(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                   cache: Dict, angles: Optional[jax.Array], *,
                   window: int = 0,
                   cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  table: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, Dict]:
-    """x: (B,1,D); pos: (B,) int32 per-sequence positions of the new token.
+    """x: (B,1,D); pos: (B,) int32 per-sequence positions of the new token
+    (-1 marks a dead/purged slot: nothing is written for it and its output
+    row is exact zeros). With ``table`` (B, NB) int32 the cache is a paged
+    arena — k/v leaves (P, bk, K, hd), logical block j of row b living in
+    physical block table[b, j] (full-cache layout only).
     Returns (out, cache)."""
     B = x.shape[0]
     if cross_kv is not None:
@@ -397,9 +402,44 @@ def attend_decode(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
         return apply_linear(p["wo"], out), cache
 
     q, k_new, v_new = _qkv(p, cfg, x, angles)
-    L = cache["k"].shape[1]
     rows = jnp.arange(B)
-    slot = jnp.mod(pos, L) if window else pos          # (B,)
+    if table is not None:
+        assert not window, "paged cache is full-layout only"
+        P, bkb = cache["k"].shape[0], cache["k"].shape[1]
+        NB = table.shape[1]
+        safe = jnp.maximum(pos, 0)
+        # dead rows (pos < 0) and positions past the table target the
+        # sentinel block P: the scatter drops them (OOB + mode='drop')
+        pb = jnp.where((pos >= 0) & (safe // bkb < NB),
+                       table[rows, jnp.minimum(safe // bkb, NB - 1)], P)
+        off = safe % bkb
+        k = cache["k"].at[pb, off].set(
+            k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[pb, off].set(
+            v_new[:, 0].astype(cache["v"].dtype), mode="drop")
+        if use_pallas():
+            from repro.kernels import ops as kops
+            out = kops.decode_attention_paged(
+                q[:, 0], k, v, pos + 1, table,
+                softcap=cfg.attn_logit_softcap)
+            out = out.reshape(B, 1, cfg.q_dim)
+        else:
+            # gather the arena back into the contiguous (B, NB*bk) layout:
+            # same shapes and values as the contiguous path for every live
+            # position, so the einsum results are bit-identical to it
+            L = NB * bkb
+            kc = k[table].reshape(B, L, *k.shape[2:])
+            vc = v[table].reshape(B, L, *v.shape[2:])
+            valid = jnp.arange(L)[None, :] <= pos[:, None]
+            out = _sdpa(cfg, q, kc, vc, valid[:, None, None, :])
+        out = jnp.where((pos >= 0)[:, None, None], out, 0.0)
+        out = apply_linear(p["wo"], out)
+        return out, {"k": k, "v": v}
+
+    L = cache["k"].shape[1]
+    # dead rows (pos = -1) park their write at slot 0 of their own row —
+    # masked by length 0 downstream, fully overwritten on slot reuse
+    slot = jnp.mod(pos, L) if window else jnp.maximum(pos, 0)  # (B,)
     k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
     v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     k = constrain(k, "batch", "kv_seq" if not window else None, None, None)
@@ -421,6 +461,9 @@ def attend_decode(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
             valid = kpos <= pcol
         mask = valid[:, None, None, :]                 # (B,1,1,L)
         out = _sdpa(cfg, q, k, v, mask)
+        # dead rows have an all-masked score row; match the kernel's
+        # exact-zero emit instead of softmax-uniform junk
+        out = jnp.where((pos >= 0)[:, None, None], out, 0.0)
     out = apply_linear(p["wo"], out)
     return out, {"k": k, "v": v}
 
@@ -482,4 +525,42 @@ def attend_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
     cv = _cache_slots(v, lengths, L, window).astype(v.dtype)
     ck = constrain(ck, "batch", "kv_seq" if not window else None, None, None)
     cv = constrain(cv, "batch", "kv_seq" if not window else None, None, None)
+    return out, {"k": ck, "v": cv}
+
+
+def attend_prefill_ext(p: Dict, cfg: ModelConfig, x: jax.Array,
+                       angles: Optional[jax.Array], arena: Dict,
+                       table: jax.Array, starts: jax.Array,
+                       lengths: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Tail prefill against a paged prefix (prefix-reuse admission).
+
+    x: (B, St, D) embeds of the UNSHARED tail only — positions start at
+    ``starts`` (the caller's rope angles already encode that offset).
+    arena: paged k/v leaves (P, bk, K, hd); table: (B, NB) int32 block
+    table whose first ``starts[b]`` positions hold the shared prefix;
+    starts/lengths: (B,) int32 — prefix length and live TAIL length.
+
+    Each tail query attends [shared prefix | causal tail]. Returns
+    (out (B, St, q_dim), tail cache {k,v}: (B, St, K, hd) slot s = tail
+    position s, zeroed past ``lengths`` — scatter_paged writes it through
+    the table at absolute offsets). jnp path only: prefix-reuse serving is
+    admission-rate bound, not prefill-flops bound (DESIGN.md §5.7)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, angles)
+    bk = arena["k"].shape[1]
+    NB = table.shape[1]
+    Lp = NB * bk
+    kp = arena["k"][table].reshape(B, Lp, *arena["k"].shape[2:])
+    vp = arena["v"][table].reshape(B, Lp, *arena["v"].shape[2:])
+    kk = jnp.concatenate([kp.astype(k.dtype), k], axis=1)   # (B, Lp+S, K, hd)
+    vv = jnp.concatenate([vp.astype(v.dtype), v], axis=1)
+    prefix_ok = jnp.arange(Lp)[None, :] < starts[:, None]   # (B, Lp)
+    tail_ok = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]  # (S, S)
+    mask = jnp.concatenate([
+        jnp.broadcast_to(prefix_ok[:, None, :], (B, S, Lp)),
+        jnp.broadcast_to(tail_ok[None], (B, S, S))], axis=2)
+    out = _sdpa(cfg, q, kk, vv, mask[:, None])              # (B,1,S,Lp+S)
+    out = apply_linear(p["wo"], out)
+    ck = _cache_slots(k, lengths, S, 0).astype(k.dtype)
+    cv = _cache_slots(v, lengths, S, 0).astype(v.dtype)
     return out, {"k": ck, "v": cv}

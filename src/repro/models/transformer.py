@@ -30,8 +30,8 @@ from repro.config import ModelConfig
 from repro.dist.sharding import constrain
 from repro.models import mamba, rotary, ssm
 from repro.models.attention import (attend_decode, attend_full,
-                                    attend_prefill, init_attention,
-                                    init_kv_cache)
+                                    attend_prefill, attend_prefill_ext,
+                                    init_attention, init_kv_cache)
 from repro.models.mlp import apply_mlp, apply_moe, init_mlp, init_moe
 from repro.models.params import (Builder, Params, apply_linear, rms_norm,
                                  softcap)
@@ -345,23 +345,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                                 cfg.head_dim), dtype=dtype),
             }
         runs[f"run{r}"] = entry
-    return {"runs": runs, "pos": jnp.zeros((batch,), dtype=jnp.int32)}
+    # pos = -1 marks a dead slot (never admitted / purged): decode leaves it
+    # parked at -1 and emits exact-zero attention for it. Admission scatter
+    # overwrites pos with the prefilled length.
+    return {"runs": runs, "pos": jnp.full((batch,), -1, dtype=jnp.int32)}
+
+
+def init_cache_paged(cfg: ModelConfig, batch: int, blocks: int,
+                     block_len: int) -> Dict:
+    """Paged cache pytree: one flat KV block arena per run instead of the
+    per-slot (batch, max_len) pool. k/v leaves are (n, blocks, block_len,
+    KV, hd); physical block 0 is reserved as the never-allocated null block
+    (the sentinel target for dead table entries). Logical-to-physical
+    mapping lives OUTSIDE the pytree in the engine's (batch, NB) block
+    table. Pure-attention stacks only — recurrent kinds have no paged
+    layout (and windowed kinds keep the ring cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    assert not cfg.is_encoder_decoder, "paged cache: decoder-only"
+    runs: Dict[str, Any] = {}
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        assert kind == "attn", (
+            f"paged cache supports pure-attention stacks only, got {kind}")
+        runs[f"run{r}"] = {"kv": {
+            "k": jnp.zeros((n, blocks, block_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype=dtype),
+            "v": jnp.zeros((n, blocks, block_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype=dtype),
+        }}
+    return {"runs": runs, "pos": jnp.full((batch,), -1, dtype=jnp.int32)}
 
 
 def _block_decode(kind: str, cfg: ModelConfig, p: Params, cache: Dict,
                   x: jax.Array, pos: jax.Array,
-                  angles: Optional[jax.Array]) -> Tuple[jax.Array, Dict]:
+                  angles: Optional[jax.Array],
+                  table: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     new_cache: Dict[str, Any] = {}
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     win = _kind_window(cfg, kind)
     if kind in ("attn", "swa"):
         out, kv = attend_decode(p["attn"], cfg, h, pos, cache["kv"], angles,
-                                window=win)
+                                window=win, table=table)
         x = x + out
         new_cache["kv"] = kv
     elif kind in ("hymba", "hymba_g"):
         a, kv = attend_decode(p["attn"], cfg, h, pos, cache["kv"], angles,
-                              window=win)
+                              window=win, table=table)
         s, sst = mamba.decode_ssm(p["ssm"], cfg, h, cache["ssm"])
         x = x + mamba.hymba_combine(p, cfg, a, s)
         new_cache["kv"], new_cache["ssm"] = kv, sst
@@ -393,8 +421,13 @@ def _block_decode(kind: str, cfg: ModelConfig, p: Params, cache: Dict,
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
                 tokens_or_embeds: jax.Array,
                 positions: Optional[jax.Array] = None,
+                table: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Dict]:
     """One new token per sequence. tokens (B,1) int or embeds (B,1,D).
+    With `table` (B, NB) int32 the cache is a paged arena (see
+    init_cache_paged) and every KV read/write indirects through it.
+    Dead slots (pos = -1) neither advance nor write: their logits row is
+    whatever the dead residual stream produces and is ignored upstream.
     Returns (logits (B,1,V), new cache)."""
     pos = cache["pos"]
     if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
@@ -420,7 +453,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
             ncs = []
             for i, pl in enumerate(run_p):
                 cl = jax.tree.map(lambda a: a[i], run_c)
-                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles)
+                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles,
+                                      table)
                 ncs.append(nc)
             new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
         elif not cfg.scan_layers:
@@ -428,18 +462,22 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
             for i in range(n):
                 pl = jax.tree.map(lambda a: a[i], run_p)
                 cl = jax.tree.map(lambda a: a[i], run_c)
-                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles)
+                x, nc = _block_decode(kind, cfg, pl, cl, x, pos, angles,
+                                      table)
                 ncs.append(nc)
             new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
         else:
             def body(xx, pc):
                 pl, cl = pc
-                xx, nc = _block_decode(kind, cfg, pl, cl, xx, pos, angles)
+                xx, nc = _block_decode(kind, cfg, pl, cl, xx, pos, angles,
+                                       table)
                 return xx, nc
             x, nc = jax.lax.scan(body, x, (run_p, run_c))
             new_runs[f"run{r}"] = nc
     logits = lm_logits(params, cfg, x)
-    return logits, {"runs": new_runs, "pos": pos + 1}
+    # dead slots (pos = -1) stay dead; live slots advance
+    return logits, {"runs": new_runs,
+                    "pos": jnp.where(pos >= 0, pos + 1, pos)}
 
 
 # ---------------------------------------------------------------------------
@@ -561,3 +599,80 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict,
     logits = lm_logits(params, cfg, x_last)
     cache = {"runs": new_runs, "pos": pos0}
     return logits, cache
+
+
+def prefill_ext(params: Params, cfg: ModelConfig, batch: Dict,
+                arena: Dict, table: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Tail prefill for prefix-reuse admission (paged pool only): process
+    the UNSHARED tail of each prompt against a shared prefix already
+    resident in the paged arena.
+
+    batch: tokens (B, St) right-padded tail token ids; lengths (B,) int32
+    live tail lengths; starts (B,) int32 prefix lengths (tail position i is
+    absolute position starts + i). arena: init_cache_paged pytree; table:
+    (B, NB) int32 block table (first `starts[b]` positions = the prefix).
+
+    Returns (logits of each row's last live tail position (B, 1, V), tail
+    cache) — tail cache leaves are (n, B, St, KV, hd) in slot layout (slot
+    s = tail position s), for scatter_paged to write through the table at
+    the absolute offsets. Cache `pos` = starts + lengths (total live
+    length). Pure-attention stacks only."""
+    lengths = batch["lengths"].astype(jnp.int32)
+    starts = batch["starts"].astype(jnp.int32)
+    x = embed_tokens(params, cfg, batch["tokens"])
+    B, S, _ = x.shape
+    x = constrain(x, "batch", "seq", None)
+    positions = None
+    if cfg.rope_kind != "none":
+        positions = starts[:, None] + jnp.arange(S)[None, :]
+
+    new_runs: Dict[str, Any] = {}
+    for r, (kind, n) in enumerate(cfg.layer_runs()):
+        assert kind == "attn", (
+            f"prefill_ext supports pure-attention stacks only, got {kind}")
+        angles = _angles_for(cfg, kind, positions)
+        run_p = params["decoder"][f"run{r}"]
+        arena_c = arena["runs"][f"run{r}"]
+
+        def body(pl, cl, xx):
+            h = rms_norm(pl["ln1"], xx, cfg.norm_eps)
+            out, kv = attend_prefill_ext(pl["attn"], cfg, h, angles,
+                                         cl["kv"], table, starts, lengths)
+            xx = xx + out
+            if "ln2" in pl:
+                h = rms_norm(pl["ln2"], xx, cfg.norm_eps)
+                if "moe" in pl:
+                    out, _ = apply_moe(pl, cfg, h)
+                    xx = xx + out
+                elif "mlp" in pl:
+                    xx = xx + apply_mlp(pl["mlp"], cfg, h)
+            return xx, {"kv": kv}
+
+        if isinstance(run_p, list):
+            caches = []
+            for i, pl in enumerate(run_p):
+                cl = jax.tree.map(lambda a: a[i], arena_c)
+                x, c = body(pl, cl, x)
+                caches.append(c)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                               *caches)
+        elif not cfg.scan_layers:
+            caches = []
+            for i in range(n):
+                pl = jax.tree.map(lambda a: a[i], run_p)
+                cl = jax.tree.map(lambda a: a[i], arena_c)
+                x, c = body(pl, cl, x)
+                caches.append(c)
+            new_runs[f"run{r}"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                               *caches)
+        else:
+            def scan_body(xx, pc):
+                pl, cl = pc
+                return body(pl, cl, xx)
+            x, nc = jax.lax.scan(scan_body, x, (run_p, arena_c))
+            new_runs[f"run{r}"] = nc
+        x = constrain(x, "batch", "seq", None)
+    x_last = jnp.take_along_axis(x, (jnp.maximum(lengths, 1) - 1)
+                                 [:, None, None], axis=1)
+    logits = lm_logits(params, cfg, x_last)
+    return logits, {"runs": new_runs, "pos": starts + lengths}

@@ -60,6 +60,9 @@ class Gauge:
     def set(self, v: float) -> None:
         self.value = v
 
+    def add(self, delta: float) -> None:
+        self.value += delta
+
     def set_max(self, v: float) -> None:
         if v > self.value:
             self.value = v

@@ -41,6 +41,7 @@ RUNNING = "running"
 DONE = "done"
 SHED_QUEUE_FULL = "shed_queue_full"
 SHED_DEADLINE = "shed_deadline"
+SHED_OVERLONG = "shed_overlong"
 FAILED_POISON = "failed_poison"
 
 
@@ -56,6 +57,8 @@ class AdmissionConfig:
     default_deadline_s: Optional[float] = None  # applied when a request
     #                              carries no deadline of its own
     max_retries: int = 2         # poison-quarantine re-queue budget
+    reject_overlong: bool = False  # shed prompts > max_len - 1 instead of
+    #                              silently truncating to the newest tokens
     # --- elastic-rank degradation ladder ---------------------------------
     elastic: bool = False        # enable serve-time rank degradation
     elastic_levels: int = 2      # degraded pow2 buckets below full rank
@@ -75,9 +78,11 @@ class ServeMetrics:
     """
 
     COUNTER_KEYS = ("submitted", "accepted", "completed",
-                    "shed_queue_full", "shed_deadline", "poison_events",
-                    "poison_retries", "poison_failures", "slot_purges",
-                    "steps")
+                    "shed_queue_full", "shed_deadline", "shed_overlong",
+                    "poison_events", "poison_retries", "poison_failures",
+                    "slot_purges", "steps", "prompt_truncations",
+                    "prefix_hits", "prefix_misses", "prefix_evictions",
+                    "cow_forks")
 
     def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
         self.registry = registry or MetricsRegistry()

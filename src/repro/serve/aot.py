@@ -57,6 +57,12 @@ ROLE_DECODE = "decode"
 ROLE_PREFILL = "prefill"
 ROLE_SCATTER = "scatter"
 ROLE_PURGE = "purge"
+# paged-pool roles (DESIGN.md §5.7); only live when ServeConfig.kv_block > 0
+ROLE_DECODE_PAGED = "decode_paged"
+ROLE_PREFILL_EXT = "prefill_ext"
+ROLE_SCATTER_PAGED = "scatter_paged"
+ROLE_PURGE_PAGED = "purge_paged"
+ROLE_COPY_BLOCKS = "copy_blocks"
 
 AOT_STAT_KEYS = ("aot_compiles", "aot_cache_hits", "aot_deser_failures",
                  "aot_fallbacks")
@@ -92,8 +98,63 @@ def purge_rows(pool: Dict, rows: jax.Array) -> Dict:
     rows >= batch are padding (dropped)."""
     runs = jax.tree.map(
         lambda leaf: leaf.at[:, rows].set(0, mode="drop"), pool["runs"])
-    pos = pool["pos"].at[rows].set(0, mode="drop")
+    pos = pool["pos"].at[rows].set(-1, mode="drop")
     return {"runs": runs, "pos": pos}
+
+
+def scatter_paged(pool: Dict, src: Dict, slots: jax.Array,
+                  table: jax.Array, starts: jax.Array) -> Dict:
+    """Paged-pool admission write: route each freshly-prefilled row of
+    ``src`` (leaves (n, B, S, KV, hd)) through the block table into the
+    flat arena (leaves (n, P, bk, KV, hd)). Row j's token i lands at
+    absolute position starts[j] + i, i.e. physical block
+    table[slots[j], absp // bk], offset absp % bk. Out-of-range slots
+    (padding), positions past the table, and null-block (0) table
+    entries all resolve to the arena-size sentinel and are dropped —
+    shared prefix blocks below ``starts`` are never written."""
+    nrows, NB = table.shape
+    S = jax.tree.leaves(src["runs"])[0].shape[2]
+    i = jnp.arange(S)[None, :]                           # (1, S)
+    absp = starts[:, None] + i                           # (B, S)
+    tail = (src["pos"] - starts)[:, None]
+    srow = jnp.minimum(slots, nrows - 1)
+
+    def _leaf(pool_l, src_l):
+        P, bk = pool_l.shape[1], pool_l.shape[2]
+        blk = absp // bk
+        ok = (i < tail) & (slots[:, None] < nrows) & (blk < NB)
+        tb = table[srow[:, None], jnp.minimum(blk, NB - 1)]
+        pb = jnp.where(ok & (tb > 0), tb, P)             # P = drop sentinel
+        return pool_l.at[:, pb, absp % bk].set(
+            src_l.astype(pool_l.dtype), mode="drop")
+
+    runs = jax.tree.map(_leaf, pool["runs"], src["runs"])
+    pos = pool["pos"].at[slots].set(src["pos"], mode="drop")
+    return {"runs": runs, "pos": pos}
+
+
+def purge_paged(pool: Dict, rows: jax.Array, blocks: jax.Array) -> Dict:
+    """Paged quarantine/retirement: zero the listed *arena blocks* (only
+    those whose refcount hit zero — shared prefix blocks another request
+    still holds are never listed, the host allocator guarantees it) and
+    mark the listed slot rows dead (pos = -1, dropping their decode
+    writes and zeroing their outputs). Both arrays are fixed-width with
+    out-of-range sentinels (arena size / batch) for padding."""
+    runs = jax.tree.map(
+        lambda leaf: leaf.at[:, blocks].set(0, mode="drop"), pool["runs"])
+    pos = pool["pos"].at[rows].set(-1, mode="drop")
+    return {"runs": runs, "pos": pos}
+
+
+def copy_blocks(pool: Dict, src: jax.Array, dst: jax.Array) -> Dict:
+    """Copy-on-write fork: arena block src[j] → dst[j] for each j. The
+    destination blocks are freshly allocated (refcount 1, unshared), so
+    this is the only write a shared block's content ever feeds. Sentinel
+    entries (>= arena size) are dropped (gathers clamp harmlessly)."""
+    def _leaf(leaf):
+        s = jnp.minimum(src, leaf.shape[1] - 1)
+        return leaf.at[:, dst].set(leaf[:, s], mode="drop")
+    return {"runs": jax.tree.map(_leaf, pool["runs"]), "pos": pool["pos"]}
 
 
 # ---------------------------------------------------------------------------
@@ -139,7 +200,8 @@ def cache_key(fingerprint: str, role: str, variant: Tuple, sig: str,
         "role": role,
         "variant": list(variant),
         "sig": sig,
-        "scfg": {"batch": scfg.batch, "max_len": scfg.max_len},
+        "scfg": {"batch": scfg.batch, "max_len": scfg.max_len,
+                 "kv_block": getattr(scfg, "kv_block", 0)},
         "model": {"name": cfg.name, "n_layers": cfg.n_layers,
                   "d_model": cfg.d_model, "vocab_size": cfg.vocab_size,
                   "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
@@ -233,10 +295,28 @@ class TracedRegistry:
             self.stats["scatter_retraces"] += 1
             return scatter_rows(pool, src, slots)
 
+        def _decode_paged_fn(p, c, t, tbl):
+            self.stats["decode_retraces"] += 1
+            return T.decode_step(p, cfg, c, t, table=tbl)
+
+        def _prefill_ext_fn(p, b, arena, tbl):
+            self.stats["prefill_retraces"] += 1
+            return T.prefill_ext(p, cfg, b, arena, tbl)
+
+        def _scatter_paged_fn(pool, src, slots, tbl, starts):
+            self.stats["scatter_retraces"] += 1
+            return scatter_paged(pool, src, slots, tbl, starts)
+
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
         self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
         self._purge = jax.jit(purge_rows, donate_argnums=(0,))
+        self._decode_paged = jax.jit(_decode_paged_fn)
+        # the arena rides along read-only (prefix gathers); not donated
+        self._prefill_ext = jax.jit(_prefill_ext_fn)
+        self._scatter_paged = jax.jit(_scatter_paged_fn, donate_argnums=(0,))
+        self._purge_paged = jax.jit(purge_paged, donate_argnums=(0,))
+        self._copy_blocks = jax.jit(copy_blocks, donate_argnums=(0,))
 
     def bind_stats(self, stats: Dict) -> None:
         """Fold any counts accumulated so far into ``stats`` and make it
@@ -259,7 +339,24 @@ class TracedRegistry:
     def purge(self, pool, rows):
         return self._purge(pool, rows)
 
-    def warm(self, ladder: Sequence, bucketed: bool) -> None:
+    def decode_paged(self, params, cache, tokens, table, *, level: int = 0):
+        return self._decode_paged(params, cache, tokens, table)
+
+    def prefill_ext(self, params, batch, arena, table, *, level: int = 0,
+                    bucket=None):
+        return self._prefill_ext(params, batch, arena, table)
+
+    def scatter_paged(self, pool, src, slots, table, starts):
+        return self._scatter_paged(pool, src, slots, table, starts)
+
+    def purge_paged(self, pool, rows, blocks):
+        return self._purge_paged(pool, rows, blocks)
+
+    def copy_blocks(self, pool, src, dst):
+        return self._copy_blocks(pool, src, dst)
+
+    def warm(self, ladder: Sequence, bucketed: bool,
+             paged: bool = False) -> None:
         """No-op: the traced registry compiles lazily, on first use."""
 
 
@@ -317,6 +414,18 @@ class AotRegistry:
             return scatter_rows, (0,)
         if role == ROLE_PURGE:
             return purge_rows, (0,)
+        if role == ROLE_DECODE_PAGED:
+            return (lambda p, c, t, tbl: self._T.decode_step(
+                p, cfg, c, t, table=tbl), ())
+        if role == ROLE_PREFILL_EXT:
+            return (lambda p, b, arena, tbl: self._T.prefill_ext(
+                p, cfg, b, arena, tbl), ())
+        if role == ROLE_SCATTER_PAGED:
+            return scatter_paged, (0,)
+        if role == ROLE_PURGE_PAGED:
+            return purge_paged, (0,)
+        if role == ROLE_COPY_BLOCKS:
+            return copy_blocks, (0,)
         raise KeyError(role)
 
     # ---- resolution ------------------------------------------------------
@@ -383,6 +492,30 @@ class AotRegistry:
     def purge(self, pool, rows):
         return self._call(ROLE_PURGE, (), pool, rows)
 
+    def decode_paged(self, params, cache, tokens, table, *, level: int = 0):
+        return self._call(ROLE_DECODE_PAGED, (level,),
+                          params, cache, tokens, table)
+
+    def prefill_ext(self, params, batch, arena, table, *, level: int = 0,
+                    bucket=None):
+        if bucket is None:
+            bucket = ("exact", int(batch["tokens"].shape[0]),
+                      int(batch["tokens"].shape[1]))
+        return self._call(ROLE_PREFILL_EXT, (level, bucket),
+                          params, batch, arena, table)
+
+    def scatter_paged(self, pool, src, slots, table, starts):
+        src_s = int(jax.tree.leaves(src["runs"])[0].shape[2])
+        return self._call(ROLE_SCATTER_PAGED,
+                          (int(src["pos"].shape[0]), src_s),
+                          pool, src, slots, table, starts)
+
+    def purge_paged(self, pool, rows, blocks):
+        return self._call(ROLE_PURGE_PAGED, (), pool, rows, blocks)
+
+    def copy_blocks(self, pool, src, dst):
+        return self._call(ROLE_COPY_BLOCKS, (), pool, src, dst)
+
     # ---- boot-time precompilation ---------------------------------------
     def _cache_aval(self):
         cfg, scfg = self.cfg, self.scfg
@@ -416,22 +549,29 @@ class AotRegistry:
             return                 # servable; lazy-deserialized on use
         self._resolve(role, variant, args)
 
-    def warm(self, ladder: Sequence, bucketed: bool) -> None:
+    def warm(self, ladder: Sequence, bucketed: bool,
+             paged: bool = False) -> None:
         """Precompile (or cache-verify) the full serving surface: the
         decode step for every elastic-rank rung, every pow2 prefill
         bucket at full rank, and the scatter/purge cache helpers.
         Lowering happens against abstract avals — no model math runs.
         After this returns, steady-state serving performs zero XLA
         compiles (``aot_compiles`` stays flat) no matter which bucket,
-        rung or helper a request exercises."""
-        with trace.span("aot_warm", rungs=len(ladder), bucketed=bucketed):
+        rung or helper a request exercises. With ``paged`` the block-
+        arena surface is warmed instead of the contiguous decode/scatter
+        (the paged engine never dispatches those roles); the non-paged
+        warm set is byte-identical to what it always was."""
+        with trace.span("aot_warm", rungs=len(ladder), bucketed=bucketed,
+                        paged=paged):
             B = self.scfg.batch
             i32 = jnp.int32
             cache_aval = self._cache_aval()
             tok_aval = jax.ShapeDtypeStruct((B, 1), i32)
-            for level, params in enumerate(ladder):
-                self._ensure(ROLE_DECODE, (level,),
-                             (params, cache_aval, tok_aval))
+            slots_aval = jax.ShapeDtypeStruct((B,), i32)
+            if not paged:
+                for level, params in enumerate(ladder):
+                    self._ensure(ROLE_DECODE, (level,),
+                                 (params, cache_aval, tok_aval))
             if bucketed:
                 src_aval = None
                 for sb in self.prefill_buckets():
@@ -444,9 +584,50 @@ class AotRegistry:
                         fn, _ = self._role_fn(ROLE_PREFILL)
                         _, src_aval = jax.eval_shape(fn, ladder[0],
                                                      batch_aval)
-                slots_aval = jax.ShapeDtypeStruct((B,), i32)
-                if src_aval is not None:
+                if not paged and src_aval is not None:
                     self._ensure(ROLE_SCATTER, (B,),
                                  (cache_aval, src_aval, slots_aval))
-            self._ensure(ROLE_PURGE, (),
-                         (cache_aval, jax.ShapeDtypeStruct((B,), i32)))
+            if not paged:
+                self._ensure(ROLE_PURGE, (),
+                             (cache_aval, slots_aval))
+                return
+            # ---- paged surface ------------------------------------------
+            bkv = int(getattr(self.scfg, "kv_block", 0))
+            NB = self.scfg.max_len // bkv
+            nblk = B * NB + 1
+            arena_aval = jax.eval_shape(
+                lambda: self._T.init_cache_paged(self.cfg, B, nblk, bkv))
+            tbl_aval = jax.ShapeDtypeStruct((B, NB), i32)
+            starts_aval = jax.ShapeDtypeStruct((B,), i32)
+            for level, params in enumerate(ladder):
+                self._ensure(ROLE_DECODE_PAGED, (level,),
+                             (params, arena_aval, tok_aval, tbl_aval))
+            pre_fn, _ = self._role_fn(ROLE_PREFILL)
+            ext_fn, _ = self._role_fn(ROLE_PREFILL_EXT)
+            seen_s = set()
+            for sb in self.prefill_buckets():
+                batch_aval = {
+                    "tokens": jax.ShapeDtypeStruct((B, sb), i32),
+                    "lengths": jax.ShapeDtypeStruct((B,), i32)}
+                ext_aval = dict(batch_aval, starts=starts_aval)
+                self._ensure(ROLE_PREFILL_EXT, (0, sb),
+                             (ladder[0], ext_aval, arena_aval, tbl_aval))
+                # scatter variants: plain prefill emits max_len-wide src
+                # caches, prefill_ext emits bucket-wide ones
+                for fn, aval in ((pre_fn, batch_aval), (ext_fn, None)):
+                    if aval is not None:
+                        _, sa = jax.eval_shape(fn, ladder[0], aval)
+                    else:
+                        _, sa = jax.eval_shape(fn, ladder[0], ext_aval,
+                                               arena_aval, tbl_aval)
+                    ss = int(jax.tree.leaves(sa["runs"])[0].shape[2])
+                    if ss not in seen_s:
+                        seen_s.add(ss)
+                        self._ensure(ROLE_SCATTER_PAGED, (B, ss),
+                                     (arena_aval, sa, slots_aval,
+                                      tbl_aval, starts_aval))
+            self._ensure(ROLE_PURGE_PAGED, (),
+                         (arena_aval, slots_aval,
+                          jax.ShapeDtypeStruct((B * NB,), i32)))
+            self._ensure(ROLE_COPY_BLOCKS, (),
+                         (arena_aval, slots_aval, slots_aval))

@@ -96,6 +96,8 @@ class ServeOptions:
     # --- engine shape -----------------------------------------------------
     batch: int = 4                  # decode slots (CLI: --batch / --slots)
     max_len: int = 256
+    kv_block: int = 0               # paged KV block size; 0 = contiguous
+    prefix_cache: bool = False      # share prompt-prefix blocks (paged)
     # --- synthetic workload (serve()) -------------------------------------
     requests: int = 8
     prompt_len: int = 16
@@ -105,6 +107,8 @@ class ServeOptions:
     max_queue: int = 0
     deadline_s: Optional[float] = None
     max_retries: int = 2
+    reject_overlong: bool = False   # shed over-long prompts typed instead
+    #                                 of truncating to the newest tokens
     elastic: bool = False
     elastic_levels: int = 2
     watchdog_s: Optional[float] = None
@@ -153,6 +157,18 @@ class ServeOptions:
                     f"(a ragged final batch cannot split over the mesh)")
         if self.batch < 1 or self.max_len < 1:
             raise ValueError("batch and max_len must be >= 1")
+        if self.kv_block < 0:
+            raise ValueError("kv_block must be >= 0 (0 = contiguous)")
+        if self.kv_block:
+            if self.kv_block % 8:
+                raise ValueError("kv_block must be a multiple of 8 "
+                                 "(TPU sublane alignment)")
+            if self.max_len % self.kv_block:
+                raise ValueError(
+                    f"kv_block {self.kv_block} must divide max_len "
+                    f"{self.max_len}")
+        if self.prefix_cache and not self.kv_block:
+            raise ValueError("prefix_cache requires kv_block > 0")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
         if not -1 <= self.metrics_port <= 65535:
@@ -162,12 +178,15 @@ class ServeOptions:
             raise ValueError("metrics_interval_s must be > 0")
 
     def serve_config(self) -> ServeConfig:
-        return ServeConfig(batch=self.batch, max_len=self.max_len)
+        return ServeConfig(batch=self.batch, max_len=self.max_len,
+                           kv_block=self.kv_block,
+                           prefix_cache=self.prefix_cache)
 
     def admission_config(self) -> "adm.AdmissionConfig":
         return adm.AdmissionConfig(max_queue=self.max_queue,
                                    default_deadline_s=self.deadline_s,
                                    max_retries=self.max_retries,
+                                   reject_overlong=self.reject_overlong,
                                    elastic=self.elastic,
                                    elastic_levels=self.elastic_levels)
 

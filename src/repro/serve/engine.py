@@ -70,6 +70,11 @@ class ServeConfig:
     max_len: int = 512            # cache capacity (prompt + generated)
     temperature: float = 0.0      # 0 => greedy
     seed: int = 0
+    # --- paged KV pool (DESIGN.md §5.7) -----------------------------------
+    kv_block: int = 0             # KV block size in tokens; 0 = contiguous
+    #                               per-slot pool (the historical layout)
+    prefix_cache: bool = False    # share identical prompt-prefix blocks
+    #                               across requests (requires kv_block > 0)
 
 
 @dataclass
@@ -87,6 +92,8 @@ class Request:
     t_admit: float = 0.0
     t_first: float = 0.0          # first token emitted (TTFT anchor)
     error: Optional[str] = None   # set on typed failure
+    truncated: bool = False       # prompt lost its oldest tokens at
+    #                               admission (over max_len - 1)
 
 
 class DrainResult(list):
@@ -164,10 +171,35 @@ class Engine:
         self.cfg = cfg
         self.scfg = scfg
         self.plan = None              # set when booted from a compressed ckpt
-        self._decode = jax.jit(
-            lambda p, c, t: T.decode_step(p, cfg, c, t))
+        self.stats: Dict[str, int] = {"prefill_retraces": 0,
+                                      "decode_retraces": 0}
+
+        def _decode_fn(p, c, t):
+            self.stats["decode_retraces"] += 1
+            return T.decode_step(p, cfg, c, t)
+
+        self._decode = jax.jit(_decode_fn)
         self._prefill_cache: Dict[int, object] = {}
         self.key = jax.random.PRNGKey(scfg.seed)
+
+    def _prefill_fn(self, max_len: int):
+        """Memoized jitted prefill per cache capacity. ``generate`` /
+        ``measure_decode_throughput`` used to build a fresh ``jax.jit``
+        closure every call, so every invocation retraced (and recompiled)
+        the whole prefill even at identical shapes; the cache keys on
+        ``max_len`` — the only trace-relevant closure capture — and the
+        retrace counter makes the bound assertable."""
+        fn = self._prefill_cache.get(max_len)
+        if fn is None:
+            cfg = self.cfg
+
+            def _p(p, b):
+                self.stats["prefill_retraces"] += 1
+                return T.prefill(p, cfg, b, max_len=max_len)
+
+            fn = jax.jit(_p)
+            self._prefill_cache[max_len] = fn
+        return fn
 
     @classmethod
     def from_compressed(cls, ckpt_dir: str, cfg: ModelConfig,
@@ -221,14 +253,11 @@ class Engine:
     def generate(self, prompts: np.ndarray, n_new: int,
                  enc_embeds: Optional[np.ndarray] = None) -> np.ndarray:
         """prompts: (B, S) int32. Returns (B, n_new)."""
-        cfg, scfg = self.cfg, self.scfg
         batch = {"tokens": jnp.asarray(prompts)}
         if enc_embeds is not None:
             batch["enc_embeds"] = jnp.asarray(enc_embeds)
         max_len = prompts.shape[1] + n_new + 1
-        logits, cache = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b, max_len=max_len))(
-                self.params, batch)
+        logits, cache = self._prefill_fn(max_len)(self.params, batch)
         outs = []
         tok = self._sample(logits)
         for _ in range(n_new):
@@ -256,9 +285,8 @@ class Engine:
         if self.cfg.is_encoder_decoder:
             b["enc_embeds"] = jnp.zeros(
                 (batch, prompt_len, self.cfg.d_model), dtype=jnp.float32)
-        logits, cache = jax.jit(lambda p, bb: T.prefill(
-            p, self.cfg, bb, max_len=prompt_len + warmup + n_new + 1))(
-                self.params, b)
+        logits, cache = self._prefill_fn(
+            prompt_len + warmup + n_new + 1)(self.params, b)
         tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
         # warmup advances the cache (each step decodes a fresh position,
         # like the timed loop) and is safely skippable with warmup=0
@@ -335,7 +363,38 @@ class ContinuousBatcher:
         self.heartbeat = heartbeat    # dist.ft.Heartbeat or None
         # always-on event ring; only writes when flight.dump_dir is set
         self.flight = flight if flight is not None else frec.FlightRecorder()
-        self.cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
+        kinds = {k for k, _ in cfg.layer_runs()}
+        self.bucketed = (kinds <= {"attn", "swa"}
+                         and not cfg.is_encoder_decoder)
+        # --- paged KV pool (DESIGN.md §5.7) -------------------------------
+        self.paged = scfg.kv_block > 0
+        if scfg.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires kv_block > 0")
+        if self.paged:
+            if scfg.max_len % scfg.kv_block:
+                raise ValueError(
+                    f"kv_block={scfg.kv_block} must divide "
+                    f"max_len={scfg.max_len}")
+            if kinds != {"attn"} or cfg.is_encoder_decoder:
+                raise ValueError(
+                    "paged KV cache requires a pure-attention decoder "
+                    f"(got layer kinds {sorted(kinds)})")
+            from repro.serve import paged as pglib
+            self.nb = scfg.max_len // scfg.kv_block
+            # worst case every slot holds a full-length row, +1 for the
+            # reserved null block — without prefix sharing allocation can
+            # never fail; sharing only frees headroom
+            self.n_blocks = scfg.batch * self.nb + 1
+            self.cache = T.init_cache_paged(cfg, scfg.batch,
+                                            self.n_blocks, scfg.kv_block)
+            self.pool = pglib.BlockPool(self.n_blocks)
+            self.prefix = (pglib.PrefixCache(scfg.kv_block)
+                           if scfg.prefix_cache else None)
+            self.table = np.zeros((scfg.batch, self.nb), dtype=np.int32)
+            self._table_dev = None          # cached device copy
+            self._req_blocks: Dict[int, tuple] = {}  # rid -> (held, nshared)
+        else:
+            self.cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.slots: List[Optional[Request]] = [None] * scfg.batch
         self.tokens = jnp.zeros((scfg.batch, 1), dtype=jnp.int32)
         self.done: List[Request] = []
@@ -350,9 +409,6 @@ class ContinuousBatcher:
         self.on_token: Optional[Callable[[Request, int], None]] = None
         self.on_terminal: Optional[Callable[[Request], None]] = None
         self.on_rewind: Optional[Callable[[Request], None]] = None
-        kinds = {k for k, _ in cfg.layer_runs()}
-        self.bucketed = (kinds <= {"attn", "swa"}
-                         and not cfg.is_encoder_decoder)
         # elastic-rank ladder: rung 0 is self.params ITSELF (token-identical
         # to the pre-ladder engine); rung ℓ slices the singular-value-
         # ordered factors to the pow2 bucket pow2_ceil(k) >> ℓ. Dense
@@ -385,7 +441,7 @@ class ContinuousBatcher:
         batcher's ladder — a no-op for the traced registry; for an
         ``AotRegistry`` this is the boot step that makes the steady-state
         loop trace-free (see ``repro.serve.api.load_engine``)."""
-        self.exec.warm(self.ladder, self.bucketed)
+        self.exec.warm(self.ladder, self.bucketed, paged=self.paged)
 
     # ---- streaming emission (frontdoor hooks) ----------------------------
     def _emit_token(self, req: Request, tok: int) -> None:
@@ -442,25 +498,51 @@ class ContinuousBatcher:
         for req in shed:
             self.flight.note("shed", rid=req.rid, status=req.status)
             self._emit_terminal(req)
+        admit = [r for r in admit if self._check_length(r)]
         if not admit:
             return
         with trace.span("admit", n=len(admit), level=self.level):
             self.flight.note("admit", rids=[r.rid for r in admit],
                              level=self.level)
-            for req in admit:
-                # cache rows hold prompt + generated tokens: an over-long
-                # prompt keeps its newest max_len-1 tokens (degrade, not
-                # crash)
-                keep = self.scfg.max_len - 1
-                if len(req.tokens) > keep:
-                    req.tokens = req.tokens[-keep:]
-            if self.bucketed:
+            if self.paged:
+                n_adm = self._admit_paged(admit, free[:len(admit)])
+            elif self.bucketed:
                 self._admit_batched(admit, free[:len(admit)])
+                n_adm = len(admit)
             else:
                 for req, slot in zip(admit, free):
                     self._admit_exact(req, slot)
+                n_adm = len(admit)
         self.stats["admissions"] += 1
-        self.stats["admitted"] += len(admit)
+        self.stats["admitted"] += n_adm
+
+    def _check_length(self, req: Request) -> bool:
+        """Over-long prompt policy at admission. Cache rows hold prompt +
+        generated tokens, so a prompt can keep at most ``max_len - 1``
+        tokens. Default: keep the NEWEST tokens (degrade, not crash) —
+        but counted, flight-recorded and flagged on the request's
+        terminal result instead of silent. With
+        ``AdmissionConfig.reject_overlong`` the request is shed typed
+        (``shed_overlong``) before it wastes a prefill."""
+        keep = self.scfg.max_len - 1
+        n = len(req.tokens)
+        if n <= keep:
+            return True
+        if self.acfg.reject_overlong:
+            req.status = adm.SHED_OVERLONG
+            self._metrics.bump("shed_overlong")
+            self.admission.shed.append(req)
+            self.flight.note("shed", rid=req.rid, status=req.status,
+                             prompt_len=n, max_len=self.scfg.max_len)
+            self._emit_terminal(req)
+            self._progress += 1          # terminal transition
+            return False
+        req.tokens = req.tokens[-keep:]
+        req.truncated = True
+        self._metrics.bump("prompt_truncations")
+        self.flight.note("truncate", rid=req.rid, kept=keep,
+                         dropped=n - keep)
+        return True
 
     def _poison_rid_rows(self, reqs: Sequence[Request],
                          last: np.ndarray) -> None:
@@ -547,15 +629,231 @@ class ContinuousBatcher:
         self.slots[slot] = req
         self._progress += 1
 
+    # ---- paged admission (DESIGN.md §5.7) --------------------------------
+    def _table_jnp(self) -> jax.Array:
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.table)
+        return self._table_dev
+
+    def _kv_gauges(self) -> None:
+        r = self._metrics.registry
+        r.gauge("kv_blocks_in_use").set(self.pool.in_use)
+        r.gauge("kv_blocks_peak").set(self.pool.peak_in_use)
+
+    def _admit_paged(self, admit: List[Request], free: List[int]) -> int:
+        """Paged admission: plan each request against the prefix cache,
+        allocate/refcount its blocks into a table row, COW-fork partial
+        matches, then prefill in (at most) two fixed-batch groups —
+        fresh rows through the plain bucketed prefill, prefix-extending
+        rows through ``prefill_ext`` — and route both results into the
+        arena with the table-indirected scatter. Requests the pool can't
+        hold (only possible with prefix sharing pinning blocks) requeue
+        at the front. Returns the number actually admitted."""
+        B = self.scfg.batch
+        bk = self.scfg.kv_block
+        plans: List[tuple] = []           # (req, slot, start)
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        deferred: List[Request] = []
+        for req, slot in zip(admit, free):
+            if deferred:                  # keep FIFO: defer the rest too
+                deferred.append(req)
+                continue
+            n = len(req.tokens)
+            need = -(-min(n + req.n_new, self.scfg.max_len) // bk)
+            plan = (self.prefix.plan(req.tokens)
+                    if self.prefix is not None else None)
+            shared = plan.shared if plan is not None else []
+            n_alloc = need - len(shared)
+            if self.prefix is not None:
+                while not self.pool.can_alloc(n_alloc):
+                    if not self.prefix.evict_lru(self.pool):
+                        break
+                    self._metrics.bump("prefix_evictions")
+            fresh = self.pool.alloc(n_alloc)
+            if fresh is None:
+                deferred.append(req)
+                continue
+            held = [e.block for e in shared]
+            for b in held:
+                self.pool.incref(b)
+            held.extend(fresh)
+            row = np.zeros((self.nb,), dtype=np.int32)
+            row[:len(held)] = held
+            self.table[slot] = row
+            start = 0
+            if plan is not None:
+                start = plan.start
+                if plan.cow_src:
+                    cow_src.append(plan.cow_src)
+                    cow_dst.append(fresh[0])
+                    self._metrics.bump("cow_forks")
+                self._metrics.bump(
+                    "prefix_hits" if start > 0 else "prefix_misses")
+            self._req_blocks[req.rid] = (held, len(shared))
+            plans.append((req, slot, start))
+        for req in reversed(deferred):
+            self.admission.requeue(req)
+        if not plans:
+            return 0
+        self._table_dev = None
+        self._kv_gauges()
+        if cow_src:
+            src = np.full((B,), self.n_blocks, dtype=np.int32)
+            dst = np.full((B,), self.n_blocks, dtype=np.int32)
+            src[:len(cow_src)] = cow_src
+            dst[:len(cow_dst)] = cow_dst
+            self.cache = self.exec.copy_blocks(
+                self.cache, jnp.asarray(src), jnp.asarray(dst))
+        tbl = self._table_jnp()
+        g0 = [j for j, p in enumerate(plans) if p[2] == 0]
+        g1 = [j for j, p in enumerate(plans) if p[2] > 0]
+        last_rows: List[Optional[np.ndarray]] = [None] * len(plans)
+        for grp, ext in ((g0, False), (g1, True)):
+            if not grp:
+                continue
+            Sg = _bucket_len(
+                max(len(plans[j][0].tokens) - plans[j][2] for j in grp),
+                self.scfg.max_len)
+            toks = np.zeros((B, Sg), dtype=np.int32)
+            lens = np.ones((B,), dtype=np.int32)
+            starts = np.zeros((B,), dtype=np.int32)
+            slots = np.full((B,), B, dtype=np.int32)    # B = dropped row
+            for row, j in enumerate(grp):
+                req, slot, start = plans[j]
+                t = np.asarray(req.tokens[start:], dtype=np.int32)
+                toks[row, :len(t)] = t
+                lens[row] = len(t)
+                starts[row] = start
+                slots[row] = slot
+            with trace.span("prefill", bucket=Sg, n=len(grp),
+                            level=self.level, ext=ext):
+                if ext:
+                    # arena gather wants the table row of each BATCH row
+                    rtbl = jnp.asarray(
+                        self.table[np.minimum(slots, B - 1)])
+                    logits, c1 = self.exec.prefill_ext(
+                        self._params_now(),
+                        {"tokens": jnp.asarray(toks),
+                         "lengths": jnp.asarray(lens),
+                         "starts": jnp.asarray(starts)},
+                        self.cache, rtbl, level=self.level, bucket=Sg)
+                else:
+                    logits, c1 = self.exec.prefill(
+                        self._params_now(),
+                        {"tokens": jnp.asarray(toks),
+                         "lengths": jnp.asarray(lens)},
+                        level=self.level, bucket=Sg)
+                self.cache = self.exec.scatter_paged(
+                    self.cache, c1, jnp.asarray(slots), tbl,
+                    jnp.asarray(starts))
+            gl = np.array(logits[:, -1])
+            for row, j in enumerate(grp):
+                last_rows[j] = gl[row]
+        last = np.stack(last_rows)                     # (n_plans, V)
+        reqs = [p[0] for p in plans]
+        if self.faults is not None:
+            for j in self.faults.prefill_rows_to_poison(
+                    self.stats["admissions"], len(plans)):
+                last[j] = np.nan
+        self._poison_rid_rows(reqs, last)
+        finite = np.isfinite(last).all(axis=-1)
+        tok = last.argmax(-1).astype(np.int32)
+        tok[~finite] = 0
+        tokj = np.zeros((B,), dtype=np.int32)
+        slotj = np.full((B,), B, dtype=np.int32)
+        for j, (req, slot, start) in enumerate(plans):
+            tokj[j] = tok[j]
+            slotj[j] = slot
+        self.tokens = self.tokens.at[jnp.asarray(slotj), 0].set(
+            jnp.asarray(tokj), mode="drop")
+        bad: List[int] = []
+        now = time.perf_counter()
+        for j, (req, slot, start) in enumerate(plans):
+            if finite[j]:
+                req.out.append(int(tok[j]))
+                self._emit_token(req, int(tok[j]))
+                req.t_first = req.t_first or now
+                self._metrics.observe_ttft(now - req.t_submit)
+                self.slots[slot] = req
+                self._progress += 1
+                if self.prefix is not None:
+                    self.prefix.register(np.asarray(req.tokens),
+                                         self.table[slot], self.pool)
+            else:
+                bad.append(j)
+        if bad:
+            ambiguous = len(bad) == len(plans) and len(plans) > 1
+            self._purge_slots([plans[j][1] for j in bad],
+                              [plans[j][0] for j in bad])
+            self._quarantine([plans[j][0] for j in bad], ambiguous)
+        return len(plans)
+
+    def _host_release(self, rows: List[int], reqs: List[Request],
+                      contaminated: bool) -> List[int]:
+        """Drop each request's block references and clear its table row.
+        ``contaminated`` (poison purge): prefix-cache entries built on
+        the request's own (fresh) blocks are evicted first, and every
+        block whose refcount hits zero is returned for device zeroing —
+        while shared prefix blocks another holder still references
+        survive untouched. Clean retirement frees without zeroing (a
+        freed block is unreachable: no table row points at it, and
+        masked positions contribute exact zeros)."""
+        zero: List[int] = []
+        for slot, req in zip(rows, reqs):
+            held, nshared = self._req_blocks.pop(req.rid, ([], 0))
+            if contaminated and self.prefix is not None:
+                fresh = held[nshared:]
+                if fresh:
+                    n = self.prefix.evict_blocks(fresh, self.pool)
+                    if n:
+                        self._metrics.bump("prefix_evictions", n)
+            for b in held:
+                if self.pool.decref(b) and contaminated:
+                    zero.append(b)
+            self.table[slot] = 0
+        self._table_dev = None
+        self._kv_gauges()
+        return zero
+
+    def _release_retired(self, rows: List[int],
+                         reqs: List[Request]) -> None:
+        """Return a retired request's blocks to the pool (no zeroing) and
+        mark its slot row dead (pos = -1) so later decode steps neither
+        write through the cleared table row nor emit junk."""
+        self._host_release(rows, reqs, contaminated=False)
+        B = self.scfg.batch
+        pad = np.full((B,), B, dtype=np.int32)
+        pad[:len(rows)] = rows
+        blk = np.full((B * self.nb,), self.n_blocks, dtype=np.int32)
+        self.cache = self.exec.purge_paged(self.cache, jnp.asarray(pad),
+                                           jnp.asarray(blk))
+
     # ---- poison quarantine -----------------------------------------------
-    def _purge_slots(self, rows: List[int]) -> None:
-        """Zero the cache rows + next-token entries of quarantined slots."""
+    def _purge_slots(self, rows: List[int],
+                     reqs: Optional[List[Request]] = None) -> None:
+        """Quarantine slot cleanup. Contiguous pool: zero the cache rows
+        + next-token entries. Paged pool (``reqs`` required — the block
+        bookkeeping is per-request): release the requests' blocks, zero
+        exactly the blocks whose refcount hit zero (shared prefix blocks
+        another request or the cache still holds are never zeroed — the
+        other holders' content is untouched by the poisoned row), and
+        mark the rows dead."""
         with trace.span("purge", rows=list(rows)):
             B = self.scfg.batch
             pad = np.full((B,), B, dtype=np.int32)
             pad[:len(rows)] = rows
             jrows = jnp.asarray(pad)
-            self.cache = self.exec.purge(self.cache, jrows)
+            if self.paged:
+                zero = self._host_release(rows, list(reqs or []),
+                                          contaminated=True)
+                blk = np.full((B * self.nb,), self.n_blocks,
+                              dtype=np.int32)
+                blk[:len(zero)] = zero
+                self.cache = self.exec.purge_paged(self.cache, jrows,
+                                                   jnp.asarray(blk))
+            else:
+                self.cache = self.exec.purge(self.cache, jrows)
             self.tokens = self.tokens.at[jrows, 0].set(0, mode="drop")
         self._metrics.bump("slot_purges", len(rows))
 
@@ -697,9 +995,14 @@ class ContinuousBatcher:
             return 0
         with trace.span("decode_step", step=idx, live=len(live),
                         level=self.level):
-            logits, self.cache = self.exec.decode(
-                self._params_now(), self.cache, self.tokens,
-                level=self.level)
+            if self.paged:
+                logits, self.cache = self.exec.decode_paged(
+                    self._params_now(), self.cache, self.tokens,
+                    self._table_jnp(), level=self.level)
+            else:
+                logits, self.cache = self.exec.decode(
+                    self._params_now(), self.cache, self.tokens,
+                    level=self.level)
         last = np.array(logits[:, -1])                 # (B, V) writable host copy
         if self.faults is not None:
             for row in self.faults.decode_rows_to_poison(idx, live):
@@ -711,6 +1014,8 @@ class ContinuousBatcher:
         bad = [i for i in live if not finite[i]]
         nxt[~finite] = 0                     # poisoned tokens never emitted
         self.tokens = jnp.asarray(nxt[:, None])
+        retired_rows: List[int] = []
+        retired_reqs: List[Request] = []
         for i in good:
             req = self.slots[i]
             req.out.append(int(nxt[i]))
@@ -722,13 +1027,18 @@ class ContinuousBatcher:
                 self._metrics.bump("completed")
                 self.done.append(req)
                 self.slots[i] = None
+                if self.paged:
+                    retired_rows.append(i)
+                    retired_reqs.append(req)
                 self._emit_terminal(req)
+        if retired_rows:
+            self._release_retired(retired_rows, retired_reqs)
         if bad:
             ambiguous = len(bad) == len(live) and len(live) > 1
             reqs = [self.slots[i] for i in bad]
             for i in bad:
                 self.slots[i] = None
-            self._purge_slots(bad)
+            self._purge_slots(bad, reqs)
             self._quarantine(reqs, ambiguous)
         return len(good)
 

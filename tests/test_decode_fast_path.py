@@ -50,6 +50,50 @@ def test_decode_attention_parity(B, H, KV, hd, L, window, cap, dtype):
     assert err <= 1e-2, err
 
 
+def test_decode_attention_zero_length_rows_exact_zero():
+    """Dead slots (length 0 — freshly purged or never used) must emit
+    EXACT zeros and never read the cache: the old kernel clamped the
+    block count to >= 1 and read row 0's keys for a dead slot."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, H, KV, hd, L = 3, 4, 2, 16, 32
+    q = rnd(ks[0], (B, H, hd))
+    k = rnd(ks[1], (B, L, KV, hd))
+    v = rnd(ks[2], (B, L, KV, hd))
+    lengths = jnp.asarray([0, 5, 0], dtype=jnp.int32)
+    o = np.asarray(ops.decode_attention(q, k, v, lengths))
+    r = np.asarray(ref.decode_attention(q, k, v, lengths))
+    assert (o[0] == 0).all() and (o[2] == 0).all()
+    assert (r[0] == 0).all() and (r[2] == 0).all()
+    assert float(np.max(np.abs(o - r))) < 1e-4
+
+
+def test_decode_attention_paged_parity():
+    """Block-table paged kernel vs the contiguous oracle on a shuffled
+    arena: gathering each slot's blocks back into a contiguous cache and
+    running the reference must match; dead rows (all-null table) zero."""
+    bk, B, NB, H, KV, hd = 16, 3, 4, 4, 2, 16
+    P = B * NB + 1
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = rnd(ks[0], (B, H, hd))
+    ka = rnd(ks[1], (P, bk, KV, hd)).at[0].set(0.0)
+    va = rnd(ks[2], (P, bk, KV, hd)).at[0].set(0.0)
+    perm = np.random.default_rng(7).permutation(np.arange(1, P))
+    lengths = np.asarray([37, 0, NB * bk], dtype=np.int32)
+    table = np.zeros((B, NB), dtype=np.int32)
+    j = 0
+    for b in range(B):
+        nblk = -(-int(lengths[b]) // bk)
+        table[b, :nblk] = perm[j:j + nblk]
+        j += nblk
+    o = ops.decode_attention_paged(q, ka, va, jnp.asarray(lengths),
+                                   jnp.asarray(table))
+    kc = ka[table.reshape(-1)].reshape(B, NB * bk, KV, hd)
+    vc = va[table.reshape(-1)].reshape(B, NB * bk, KV, hd)
+    r = ref.decode_attention(q, kc, vc, jnp.asarray(lengths))
+    assert (np.asarray(o[1]) == 0).all()
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-2
+
+
 def test_decode_attention_ring_wraparound():
     """Ring lengths far past the window: every slot live, ages wrap."""
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -217,6 +261,32 @@ def test_batcher_exact_path_for_stateful_archs():
     for r in done:
         want = eng.generate(r.tokens[None, :], n_new=3)[0]
         assert (np.asarray(r.out) == want).all(), (r.rid, r.out, want)
+
+
+def test_engine_retrace_bound(mini_params):
+    """``Engine.generate`` / ``measure_decode_throughput`` used to build
+    a fresh ``jax.jit`` closure per call, so EVERY call retraced the full
+    prefill and decode. The memoized executables trace once per cache
+    capacity and are shared between the two entry points."""
+    eng = Engine(mini_params, CFG, ServeConfig(temperature=0.0))
+    p = np.random.default_rng(0).integers(0, CFG.vocab_size, size=(2, 8),
+                                          dtype=np.int32)
+    first = eng.generate(p, n_new=4)
+    for _ in range(3):
+        assert (eng.generate(p, n_new=4) == first).all()
+    assert eng.stats["prefill_retraces"] == 1, eng.stats
+    assert eng.stats["decode_retraces"] == 1, eng.stats
+    # the throughput meter at the same capacity reuses both executables
+    for _ in range(2):
+        eng.measure_decode_throughput(batch=2, prompt_len=8, n_new=4,
+                                      warmup=0)
+    assert eng.stats["prefill_retraces"] == 1, eng.stats
+    assert eng.stats["decode_retraces"] == 1, eng.stats
+    # a new cache capacity costs one more trace of each — not one per call
+    for _ in range(2):
+        eng.generate(p, n_new=6)
+    assert eng.stats["prefill_retraces"] == 2, eng.stats
+    assert eng.stats["decode_retraces"] == 2, eng.stats
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,389 @@
+"""Paged KV cache (ISSUE 9, DESIGN.md §5.7).
+
+The load-bearing oracle is the CONTIGUOUS per-slot pool: under every
+workload — mixed-length bucketed admission, elastic rung transitions,
+the seeded chaos suite — the paged pool must produce EXACTLY the same
+tokens (greedy decode is deterministic; the paged gather reproduces the
+contiguous cache value-for-value). Prefix reuse adds its own oracle: a
+request that shares refcounted blocks (including a copy-on-write fork)
+must decode identically to one that prefilled its whole prompt, and a
+poison purge of a sharing request must free its private blocks without
+touching the shared ones other holders still read.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import compress as CC
+from repro.dist import faultinject as FI
+from repro.models import transformer as T
+from repro.serve import admission as adm
+from repro.serve import paged as pglib
+from repro.serve.engine import ContinuousBatcher, Request, ServeConfig
+
+CFG = get_config("llama-mini").replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256)
+CONTIG = ServeConfig(batch=4, max_len=64)
+PAGED = ServeConfig(batch=4, max_len=64, kv_block=16)
+SHARED = ServeConfig(batch=4, max_len=64, kv_block=16, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init_model(CFG, jax.random.PRNGKey(0))
+    return p
+
+
+@pytest.fixture(scope="module")
+def comp(params):
+    calib = [{"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)}]
+    cfg = CFG.replace(rank_multiple=1)
+    c, _ = CC.build_plan_and_params(
+        params, cfg, CC.CompressionConfig(ratio=0.4), calib)
+    return c
+
+
+def make_requests(n=6, n_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, n_new=n_new,
+                    tokens=rng.integers(0, CFG.vocab_size, size=(7,),
+                                        dtype=np.int32))
+            for i in range(n)]
+
+
+def clone(reqs):
+    return [Request(rid=r.rid, tokens=np.array(r.tokens), n_new=r.n_new,
+                    deadline_s=r.deadline_s) for r in reqs]
+
+
+def drive(params, reqs, scfg, *, stagger=0, **kw):
+    """Submit (optionally interleaving engine steps every ``stagger``
+    requests — the SAME schedule for oracle and paged runs) and drain."""
+    cb = ContinuousBatcher(params, CFG, scfg, **kw)
+    for i, r in enumerate(reqs):
+        cb.submit(r)
+        if stagger and i % stagger == stagger - 1:
+            cb.step()
+    return cb, cb.run_until_drained()
+
+
+def outs(res):
+    return {r.rid: list(r.out) for r in res}
+
+
+def assert_pool_drained(cb):
+    """Every block returned: no leak survives a full drain."""
+    assert cb.pool.in_use == 0
+    assert (cb.table == 0).all()
+    assert not cb._req_blocks
+
+
+# ---------------------------------------------------------------------------
+# BlockPool / PrefixCache units
+# ---------------------------------------------------------------------------
+def test_block_pool_alloc_free_refcount():
+    pool = pglib.BlockPool(9)                   # 8 usable + null block 0
+    assert pool.in_use == 0
+    assert pool.can_alloc(8) and not pool.can_alloc(9)
+    a = pool.alloc(3)
+    assert a is not None and len(set(a)) == 3 and 0 not in a
+    assert pool.in_use == 3
+    assert pool.alloc(6) is None                # only 5 left...
+    assert pool.in_use == 3                     # ...and the miss is a no-op
+    pool.incref(a[0])
+    assert not pool.decref(a[0])                # ref 2 -> 1: still held
+    assert pool.decref(a[0])                    # ref 1 -> 0: freed
+    for b in a[1:]:
+        assert pool.decref(b)
+    assert pool.in_use == 0 and pool.peak_in_use == 3
+
+
+def test_block_pool_is_deterministic():
+    p1, p2 = pglib.BlockPool(8), pglib.BlockPool(8)
+    assert p1.alloc(3) == p2.alloc(3)
+    a, b = p1.alloc(2), p2.alloc(2)
+    assert a == b
+    for x in a:
+        p1.decref(x)
+    for x in b:
+        p2.decref(x)
+    assert p1.alloc(4) == p2.alloc(4)           # LIFO free-list reuse
+
+
+def _seeded_cache(bk=4):
+    """One registered prompt: 2 full blocks (+1 private tail block)."""
+    pool = pglib.BlockPool(12)
+    cache = pglib.PrefixCache(bk)
+    toks = np.arange(10, dtype=np.int32)        # blocks [0..3], [4..7], tail
+    blocks = pool.alloc(3)
+    row = np.zeros((8,), dtype=np.int32)
+    row[:3] = blocks
+    cache.register(toks, row, pool)             # publishes the 2 full blocks
+    return pool, cache, toks, blocks
+
+
+def test_prefix_cache_plan_full_and_cow():
+    pool, cache, toks, blocks = _seeded_cache()
+    plan = cache.plan(toks)                     # exact same prompt
+    assert [e.block for e in plan.shared] == blocks[:2]
+    assert plan.start == 8 and plan.cow_len == 0
+    # diverge INSIDE block 1: tokens 4,5 match then 99 != 6 -> COW d=2
+    t2 = np.array([0, 1, 2, 3, 4, 5, 99, 98, 97, 96], dtype=np.int32)
+    p2 = cache.plan(t2)
+    assert [e.block for e in p2.shared] == blocks[:1]
+    assert p2.cow_src == blocks[1] and p2.cow_len == 2
+    assert p2.start == 6
+    # diverge at the first token: nothing shared
+    p3 = cache.plan(np.array([7, 7, 7, 7, 7], dtype=np.int32))
+    assert p3.shared == [] and p3.start == 0 and p3.cow_len == 0
+
+
+def test_prefix_cache_evicts_leaves_first_then_roots():
+    pool, cache, _, blocks = _seeded_cache()
+    for b in blocks:                            # the request retires
+        pool.decref(b)
+    assert pool.in_use == 2                     # cache still pins 2 entries
+    assert cache.evict_lru(pool) and pool.in_use == 1
+    assert cache.evict_lru(pool) and pool.in_use == 0
+    assert not cache.evict_lru(pool)            # nothing evictable left
+
+
+def test_prefix_cache_evict_blocks_drops_orphans():
+    pool, cache, _, blocks = _seeded_cache()
+    for b in blocks:
+        pool.decref(b)
+    # evicting the ROOT block must also drop its now-orphaned child
+    assert cache.evict_blocks([blocks[0]], pool) == 2
+    assert pool.in_use == 0
+    assert cache.plan(np.arange(10, dtype=np.int32)).shared == []
+
+
+# ---------------------------------------------------------------------------
+# Paged vs contiguous token identity
+# ---------------------------------------------------------------------------
+def test_paged_matches_contiguous_mixed_lengths(params):
+    """Mixed prompt lengths across many bucketed admission rounds: the
+    block-table pool is invisible in the output stream, and every block
+    comes back after the drain."""
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i, n_new=4,
+                    tokens=rng.integers(0, CFG.vocab_size,
+                                        size=(int(rng.integers(1, 40)),),
+                                        dtype=np.int32))
+            for i in range(10)]
+    cb0, r0 = drive(params, clone(reqs), CONTIG, stagger=3)
+    cb1, r1 = drive(params, reqs, PAGED, stagger=3)
+    assert r0.status == r1.status == "drained"
+    assert outs(r1) == outs(r0)
+    assert cb1.pool.peak_in_use > 0
+    assert_pool_drained(cb1)
+    m = cb1.metrics()
+    assert m["gauges"]["kv_blocks_in_use"] == 0
+    assert m["gauges"]["kv_blocks_peak"] == cb1.pool.peak_in_use
+
+
+def test_paged_elastic_rungs_token_identity(comp):
+    """Elastic degradation flips decode params mid-flight; the paged
+    decode must ride every rung transition token-identically."""
+    acfg = adm.AdmissionConfig(elastic=True, elastic_levels=2,
+                               degrade_above=4, restore_below=1)
+    cb0, r0 = drive(comp, make_requests(n=16), CONTIG, admission=acfg)
+    cb1, r1 = drive(comp, make_requests(n=16), PAGED, admission=acfg)
+    assert r0.status == r1.status == "drained"
+    m0, m1 = cb0.metrics(), cb1.metrics()
+    assert set(m1["rank_residency"]) > {"0"}    # actually degraded
+    assert m1["rank_residency"] == m0["rank_residency"]
+    assert outs(r1) == outs(r0)
+    assert_pool_drained(cb1)
+
+
+# ---------------------------------------------------------------------------
+# Chaos suite on the paged pool
+# ---------------------------------------------------------------------------
+CHAOS = [
+    dict(nan_decode_step=2, nan_rows=(1,)),     # pinned single decode row
+    dict(seed=7, nan_decode_step=3),            # seeded row choice
+    dict(nan_prefill_admission=0, nan_rows=(0,)),   # poisoned prefill
+    dict(nan_decode_step=1, nan_rows="all"),    # ambiguous -> bisection
+]
+
+
+@pytest.mark.parametrize("spec", CHAOS)
+def test_paged_chaos_token_identity(params, spec):
+    """Every injected fault: the paged run completes with EXACTLY the
+    contiguous run's tokens and identical resilience metrics (admission
+    rounds match, so the seeded injectors fire on the same rows)."""
+    cb0, r0 = drive(params, make_requests(), CONTIG,
+                    faults=FI.FaultPlan(**spec))
+    plan = FI.FaultPlan(**spec)
+    cb1, r1 = drive(params, make_requests(), PAGED, faults=plan)
+    assert r0.status == r1.status == "drained"
+    assert plan.fired                           # the injector really fired
+    assert outs(r1) == outs(r0)
+    m0, m1 = cb0.metrics(), cb1.metrics()
+    for k in ("poison_events", "poison_retries", "poison_failures",
+              "slot_purges", "completed"):
+        assert m1[k] == m0[k], k
+    assert_pool_drained(cb1)
+
+
+def test_paged_persistent_poison_fails_typed(params):
+    """A content-poisoned request exhausts its budget and fails typed on
+    the paged pool too — its blocks freed, batch-mates unharmed."""
+    acfg = adm.AdmissionConfig(max_retries=1)
+    cb0, r0 = drive(params, make_requests(), CONTIG,
+                    faults=FI.FaultPlan(poison_rids=(2,)), admission=acfg)
+    cb1, r1 = drive(params, make_requests(), PAGED,
+                    faults=FI.FaultPlan(poison_rids=(2,)), admission=acfg)
+    assert [r.rid for r in r1.failed] == [2]
+    assert r1.failed[0].status == adm.FAILED_POISON
+    assert cb1.metrics()["poison_failures"] == 1
+    assert outs(r1) == outs(r0)
+    assert_pool_drained(cb1)
+
+
+# ---------------------------------------------------------------------------
+# Prefix reuse
+# ---------------------------------------------------------------------------
+def _prefix_workload(seed=5):
+    """3 requests: r0 seeds the cache (2 full blocks), r1 reuses the
+    header block exactly, r2 matches 5 tokens INTO r0's second block —
+    a copy-on-write fork. Divergence tokens are forced distinct so the
+    hit/miss/fork counters are deterministic."""
+    rng = np.random.default_rng(seed)
+    V = CFG.vocab_size
+    H = rng.integers(0, V, size=(16,), dtype=np.int32)      # 1 full block
+    A = rng.integers(0, V, size=(16,), dtype=np.int32)      # r0's block 1
+    t0 = np.concatenate([H, A, rng.integers(0, V, size=(1,),
+                                            dtype=np.int32)])
+    tailB = rng.integers(0, V, size=(10,), dtype=np.int32)
+    tailB[0] = (A[0] + 1) % V                   # no accidental COW match
+    tailC = rng.integers(0, V, size=(9,), dtype=np.int32)
+    tailC[0] = (A[5] + 1) % V                   # diverge at A[5]
+    return [Request(rid=0, n_new=4, tokens=t0),
+            Request(rid=1, n_new=4, tokens=np.concatenate([H, tailB])),
+            Request(rid=2, n_new=4,
+                    tokens=np.concatenate([H, A[:5], tailC]))]
+
+
+def drive_staggered(params, reqs, scfg, **kw):
+    """r0 first (admitted + registered), then the sharers."""
+    cb = ContinuousBatcher(params, CFG, scfg, **kw)
+    cb.submit(reqs[0])
+    cb.step()
+    for r in reqs[1:]:
+        cb.submit(r)
+    return cb, cb.run_until_drained()
+
+
+def test_prefix_reuse_token_identity_and_refcounts(params):
+    reqs = _prefix_workload()
+    cb0, r0 = drive_staggered(params, clone(reqs), CONTIG)
+    cb1, r1 = drive_staggered(params, reqs, SHARED)
+    assert r0.status == r1.status == "drained"
+    assert outs(r1) == outs(r0)                 # sharing is invisible
+    m = cb1.metrics()
+    assert m["prefix_misses"] == 1              # r0 seeded the cache
+    assert m["prefix_hits"] == 2                # r1 (exact), r2 (COW)
+    assert m["cow_forks"] == 1                  # r2 forked r0's block 1
+    # after the drain only the 2 published entries still pin blocks;
+    # evicting them returns the pool to empty — refcounted frees balance
+    assert cb1.pool.in_use == 2
+    assert cb1.prefix.evict_lru(cb1.pool)
+    assert cb1.prefix.evict_lru(cb1.pool)
+    assert not cb1.prefix.evict_lru(cb1.pool)
+    assert cb1.pool.in_use == 0
+    assert not cb1._req_blocks
+
+
+def test_poison_purge_spares_shared_prefix_blocks(params):
+    """rid 1 (sharing r0's header block) is content-poisoned and fails
+    typed at admission. Its purge zeroes ONLY its private blocks: r0 —
+    mid-decode through the shared header — and r2 — admitted in the same
+    round, COW-forked off the same cache — finish token-identically to
+    the clean run."""
+    reqs = _prefix_workload()
+    _, clean = drive_staggered(params, clone(reqs), CONTIG)
+    cb, res = drive_staggered(params, reqs, SHARED,
+                              faults=FI.FaultPlan(poison_rids=(1,)),
+                              admission=adm.AdmissionConfig(max_retries=0))
+    assert res.status == "drained"
+    assert [r.rid for r in res.failed] == [1]
+    assert cb.metrics()["poison_failures"] == 1
+    want = outs(clean)
+    assert outs(res) == {0: want[0], 2: want[2]}
+
+
+# ---------------------------------------------------------------------------
+# Purge-then-reuse (the length-0 block-0 regression)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scfg", [CONTIG, PAGED],
+                         ids=["contiguous", "paged"])
+def test_purge_then_reuse_slot_bit_identical(params, scfg):
+    """A freshly purged slot must behave exactly like a never-used one:
+    the decode step used to address row/block 0 for length-0 rows, so a
+    purged slot's stale cache could leak into its next occupant."""
+    rng = np.random.default_rng(21)
+    bad = Request(rid=0, n_new=3,
+                  tokens=rng.integers(0, CFG.vocab_size, size=(12,),
+                                      dtype=np.int32))
+    good_t = rng.integers(0, CFG.vocab_size, size=(9,), dtype=np.int32)
+    cb0 = ContinuousBatcher(params, CFG, scfg)      # fresh-engine oracle
+    cb0.submit(Request(rid=1, n_new=3, tokens=good_t.copy()))
+    want = outs(cb0.run_until_drained())[1]
+    cb = ContinuousBatcher(params, CFG, scfg,
+                           faults=FI.FaultPlan(poison_rids=(0,)),
+                           admission=adm.AdmissionConfig(max_retries=0))
+    cb.submit(bad)
+    cb.step()                       # admit -> poison -> purge slot 0
+    assert [r.rid for r in cb.failed] == [0]
+    cb.submit(Request(rid=1, n_new=3, tokens=good_t.copy()))
+    res = cb.run_until_drained()
+    assert res.status == "drained"
+    assert outs(res)[1] == want     # slot 0 reused, bit-identical
+
+
+# ---------------------------------------------------------------------------
+# Over-long prompt policy (truncation counted / strict shedding)
+# ---------------------------------------------------------------------------
+def test_overlong_prompt_truncation_is_counted(params):
+    rng = np.random.default_rng(31)
+    long_t = rng.integers(0, CFG.vocab_size, size=(80,), dtype=np.int32)
+    cb = ContinuousBatcher(params, CFG, CONTIG)
+    req = Request(rid=0, n_new=3, tokens=long_t.copy())
+    cb.submit(req)
+    res = cb.run_until_drained()
+    assert res.status == "drained" and len(res) == 1
+    assert req.truncated and len(req.tokens) == CONTIG.max_len - 1
+    assert (req.tokens == long_t[-(CONTIG.max_len - 1):]).all()
+    assert cb.metrics()["prompt_truncations"] == 1
+    # the kept-newest-tokens run equals a request submitted pre-truncated
+    cb2 = ContinuousBatcher(params, CFG, CONTIG)
+    cb2.submit(Request(rid=0, n_new=3,
+                       tokens=long_t[-(CONTIG.max_len - 1):].copy()))
+    assert outs(cb2.run_until_drained()) == outs(res)
+
+
+def test_reject_overlong_sheds_typed(params):
+    rng = np.random.default_rng(32)
+    cb = ContinuousBatcher(params, CFG, CONTIG,
+                           admission=adm.AdmissionConfig(
+                               reject_overlong=True))
+    long_req = Request(rid=0, n_new=3,
+                       tokens=rng.integers(0, CFG.vocab_size, size=(80,),
+                                           dtype=np.int32))
+    ok_req = Request(rid=1, n_new=3,
+                     tokens=rng.integers(0, CFG.vocab_size, size=(8,),
+                                         dtype=np.int32))
+    cb.submit(long_req)
+    cb.submit(ok_req)
+    res = cb.run_until_drained()
+    assert res.status == "drained"
+    assert [r.rid for r in res] == [1]          # short request unharmed
+    assert long_req.status == adm.SHED_OVERLONG
+    assert long_req in res.shed
+    m = cb.metrics()
+    assert m["shed_overlong"] == 1 and m["prompt_truncations"] == 0

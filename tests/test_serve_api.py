@@ -64,6 +64,8 @@ GOLDEN = [
     (["--rsvd-threshold", "96"], "rsvd_threshold", 96),
     (["--batch", "3"], "batch", 3),
     (["--max-len", "128"], "max_len", 128),
+    (["--kv-block", "16"], "kv_block", 16),
+    (["--prefix-cache"], "prefix_cache", True),
     (["--requests", "5"], "requests", 5),
     (["--prompt-len", "9"], "prompt_len", 9),
     (["--n-new", "11"], "n_new", 11),
@@ -71,6 +73,7 @@ GOLDEN = [
     (["--max-queue", "6"], "max_queue", 6),
     (["--deadline-s", "12.5"], "deadline_s", 12.5),
     (["--max-retries", "3"], "max_retries", 3),
+    (["--reject-overlong"], "reject_overlong", True),
     (["--elastic"], "elastic", True),
     (["--elastic-levels", "1"], "elastic_levels", 1),
     (["--watchdog-s", "45"], "watchdog_s", 45.0),
